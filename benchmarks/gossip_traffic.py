@@ -1,0 +1,53 @@
+"""Beyond-paper benchmark: modeled gossip collective bytes per step —
+sparse FMMD schedule vs clique all-gather vs all-reduce DP, across agent
+counts. Quantifies the paper's payoff on the ICI fabric (DESIGN §4)."""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import gossip
+from repro.launch.fabric import design_mixing_matrix
+
+
+def run(kappa: float = 1e9) -> list[dict]:
+    rows = []
+    for m, pods in ((8, 1), (16, 1), (32, 2)):
+        w, design = design_mixing_matrix(m, pods=pods, kappa_bytes=kappa)
+        sched = gossip.build_schedule(w)
+        sparse = gossip.gossip_collective_bytes(sched, kappa)
+        clique = m * (m - 1) * kappa          # all-gather everyone
+        allreduce = 2 * (m - 1) / m * kappa * m  # ring AR total
+        rows.append(
+            dict(m=m, pods=pods, rounds=len(sched.rounds),
+                 links=len(design.activated_links) if design else 0,
+                 sparse_GB=sparse / 1e9, clique_GB=clique / 1e9,
+                 allreduce_GB=allreduce / 1e9,
+                 rho=float(np.linalg.norm(
+                     w - np.full((m, m), 1 / m), 2)))
+        )
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    r16 = [r for r in rows if r["m"] == 16][0]
+    emit(
+        "gossip_traffic",
+        1e6 * (time.perf_counter() - t0) / len(rows),
+        f"m16_sparse={r16['sparse_GB']:.1f}GB_vs_clique={r16['clique_GB']:.1f}GB"
+        f"_x{r16['clique_GB']/max(r16['sparse_GB'],1e-9):.1f}",
+    )
+    for r in rows:
+        print(
+            f"  m={r['m']:3d} pods={r['pods']} links={r['links']:3d} "
+            f"rounds={r['rounds']:2d} rho={r['rho']:.3f} "
+            f"sparse={r['sparse_GB']:6.1f}GB clique={r['clique_GB']:6.1f}GB "
+            f"allreduce={r['allreduce_GB']:6.1f}GB"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Lemma III.1/III.2 numeric validation: fluid-simulated makespan equals
+the closed form max_e κ·t_e/C_e on random scenarios, for both max-min
+(TCP-like) and static equal-share allocations."""
+
+import time
+
+import numpy as np
+
+from repro.net import (
+    build_overlay,
+    compute_categories,
+    demands_from_links,
+    lemma31_time,
+    random_geometric_underlay,
+    route_direct,
+    simulate,
+)
+from benchmarks.common import emit
+
+
+def run(trials: int = 20) -> dict:
+    rng = np.random.default_rng(0)
+    max_rel_err = 0.0
+    t0 = time.perf_counter()
+    for trial in range(trials):
+        u = random_geometric_underlay(14, radius=0.45, seed=trial)
+        m = 5
+        ov = build_overlay(u, list(u.graph.nodes)[:m])
+        cats = compute_categories(ov)
+        links = [
+            (i, j) for i in range(m) for j in range(i + 1, m)
+            if rng.random() < 0.5
+        ] or [(0, 1)]
+        demands = demands_from_links(links, 1e6, m)
+        sol = route_direct(demands, cats, 1e6)
+        closed = lemma31_time(sol, ov, 1e6)
+        for fairness in ("maxmin", "equal"):
+            sim = simulate(sol, ov, fairness=fairness)
+            max_rel_err = max(
+                max_rel_err, abs(sim.makespan - closed) / closed
+            )
+    return dict(trials=trials, max_rel_err=max_rel_err,
+                seconds=time.perf_counter() - t0)
+
+
+def main() -> None:
+    r = run()
+    emit(
+        "lemma31_validation",
+        1e6 * r["seconds"] / r["trials"],
+        f"max_rel_err={r['max_rel_err']:.2e};trials={r['trials']}",
+    )
+    assert r["max_rel_err"] < 1e-6
+
+
+if __name__ == "__main__":
+    main()

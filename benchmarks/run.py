@@ -1,0 +1,34 @@
+"""Benchmark harness: one function per paper table/figure (+ extensions).
+
+Each prints a ``name,us_per_call,derived`` CSV line followed by detail
+rows. Usage: PYTHONPATH=src python -m benchmarks.run [name ...]
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_fmmd_variants,
+        fig5_training,
+        gossip_traffic,
+        lemma31_validation,
+        roofline_bench,
+        table1_runtimes,
+    )
+
+    all_benches = {
+        "fig4_fmmd_variants": fig4_fmmd_variants.main,
+        "table1_runtimes": table1_runtimes.main,
+        "fig5_training": fig5_training.main,
+        "lemma31_validation": lemma31_validation.main,
+        "roofline_bench": roofline_bench.main,
+        "gossip_traffic": gossip_traffic.main,
+    }
+    names = sys.argv[1:] or list(all_benches)
+    for name in names:
+        all_benches[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Checkpoint/restore with atomic writes, retention, async saves."""
+
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,159 @@
+"""Checkpoint/restore for fault-tolerant training.
+
+Layout: <dir>/step_<N>/ with one .npz per top-level state key plus a
+manifest (pytree structure + shapes + metadata). Writes go to a temp
+directory and are atomically renamed, so a crash mid-save never corrupts
+the latest checkpoint. ``AsyncCheckpointer`` runs saves on a background
+thread (device→host transfer happens synchronously, serialization
+asynchronously), and retention keeps the most recent K checkpoints.
+
+Elastic restore: ``restore(..., num_agents=m)`` re-maps stacked-agent
+state between different agent counts (new agents start from agent 0's
+replica; dropped agents are discarded) — the checkpoint side of elastic
+scaling (see repro.runtime.fault_tolerance for the mixing-matrix side).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(state: Any):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, state: Any, keep: int = 3) -> str:
+    """Synchronous atomic save; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(state)
+    arrays = {}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"leaf_{i}"] = arr
+    np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "time": time.time(),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _apply_retention(directory, keep)
+    return final
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str,
+    example_state: Any,
+    step: int | None = None,
+    num_agents: int | None = None,
+    shardings: Any = None,
+) -> tuple[Any, int]:
+    """Restore (state, step). ``example_state`` provides the pytree
+    structure; ``num_agents`` triggers elastic agent-axis re-mapping;
+    ``shardings`` places leaves directly onto devices."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "state.npz"))
+    leaves, treedef = _flatten(example_state)
+    loaded = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        ref_shape = tuple(np.asarray(jax.eval_shape(lambda: ref)).shape) \
+            if not hasattr(ref, "shape") else tuple(ref.shape)
+        if (
+            num_agents is not None
+            and arr.ndim >= 1
+            and len(ref_shape) == arr.ndim
+            and ref_shape[1:] == arr.shape[1:]
+            and ref_shape[0] != arr.shape[0]
+        ):
+            arr = _remap_agents(arr, ref_shape[0])
+        loaded.append(arr)
+    state = jax.tree.unflatten(treedef, loaded)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, step
+
+
+def _remap_agents(arr: np.ndarray, new_m: int) -> np.ndarray:
+    """Elastic agent-axis resize: shrink = truncate; grow = clone agent 0."""
+    old_m = arr.shape[0]
+    if new_m <= old_m:
+        return arr[:new_m]
+    extra = np.repeat(arr[:1], new_m - old_m, axis=0)
+    return np.concatenate([arr, extra], axis=0)
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves: device→host copy now, disk write in background."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, state: Any) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def worker():
+            try:
+                save(self.directory, step, host_state, keep=self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

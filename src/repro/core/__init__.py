@@ -1,0 +1,34 @@
+"""Paper core: mixing-matrix design, D-PSGD, joint designer."""
+
+from repro.core.designer import DesignOutcome, design, evaluate_design, sweep_iterations
+from repro.core.dpsgd import (
+    consensus_distance,
+    make_dpsgd_step,
+    mix_params,
+    replicate_for_agents,
+    train,
+)
+from repro.core.fmmd import FMMDResult, fmmd, fmmd_wp, theorem35_bound
+from repro.core.mixing import (
+    ConvergenceConstants,
+    ideal_matrix,
+    incidence_matrix,
+    iterations_to_converge,
+    matrix_from_weights,
+    rho,
+    rho_gradient,
+    swapping_matrix,
+    total_time,
+    validate_mixing,
+    weights_from_matrix,
+)
+from repro.core.sca import sca_design
+from repro.core.topology_baselines import (
+    clique_design,
+    clique_links,
+    prim_design,
+    prim_links,
+    ring_design,
+    ring_links,
+)
+from repro.core.weight_opt import WeightOptResult, optimize_weights

@@ -1,0 +1,153 @@
+"""Joint design pipeline — the paper's full system (objective (15)).
+
+Given an overlay (or just its inferred categories), a model size κ, and
+convergence constants, produce:
+
+  1. a mixing matrix W (FMMD-WP by default, or a named baseline),
+  2. an optimal overlay routing for the demands W triggers (MILP (8)/(12)
+     or the congestion-aware heuristic),
+  3. per-iteration time τ (routed) and τ̄ (default paths), ρ(W), K(ρ),
+     and the estimated total training time τ·K.
+
+``sweep_iterations`` searches the FMMD iteration count T — the outer
+knob trading per-iteration cost against convergence speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import mixing
+from repro.core.fmmd import FMMDResult, fmmd, fmmd_wp, _tau_bar
+from repro.core.sca import sca_design
+from repro.core.topology_baselines import (
+    clique_design,
+    prim_design,
+    ring_design,
+)
+from repro.net.categories import Categories, compute_categories
+from repro.net.demands import demands_from_links
+from repro.net.routing import RoutingSolution, route, route_direct
+from repro.net.topology import OverlayNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignOutcome:
+    design: FMMDResult
+    routing: RoutingSolution
+    tau: float           # routed per-iteration time (optimal scheme)
+    tau_bar: float       # default-path per-iteration time (eq. 22)
+    rho: float
+    iterations_to_eps: float
+    total_time: float    # τ · K(ρ) — objective (15)
+
+    @property
+    def name(self) -> str:
+        return self.design.variant
+
+
+def evaluate_design(
+    design: FMMDResult,
+    categories: Categories,
+    kappa: float,
+    num_agents: int,
+    constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
+    optimize_routing: bool = True,
+    milp_time_limit: float = 60.0,
+) -> DesignOutcome:
+    """Route the design's demands and price its total training time."""
+    links = design.activated_links
+    demands = demands_from_links(links, kappa, num_agents) if links else []
+    if demands:
+        if optimize_routing:
+            sol = route(
+                demands, categories, kappa, num_agents,
+                time_limit=milp_time_limit,
+            )
+        else:
+            sol = route_direct(demands, categories, kappa)
+    else:
+        sol = RoutingSolution(
+            demands=(), trees=(), completion_time=0.0,
+            method="empty", solve_seconds=0.0,
+        )
+    rho_v = design.rho
+    k_eps = mixing.iterations_to_converge(rho_v, num_agents, constants)
+    return DesignOutcome(
+        design=design,
+        routing=sol,
+        tau=sol.completion_time,
+        tau_bar=_tau_bar(frozenset(links), categories, kappa),
+        rho=rho_v,
+        iterations_to_eps=k_eps,
+        total_time=sol.completion_time * k_eps,
+    )
+
+
+def design(
+    method: str,
+    categories: Categories,
+    kappa: float,
+    num_agents: int,
+    overlay: OverlayNetwork | None = None,
+    iterations: int = 12,
+    constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
+    optimize_routing: bool = True,
+) -> DesignOutcome:
+    """Produce and price one named design.
+
+    method ∈ {"fmmd", "fmmd-w", "fmmd-p", "fmmd-wp", "clique", "ring",
+              "prim", "sca"}.
+    """
+    m = num_agents
+    method = method.lower()
+    if method == "fmmd":
+        d = fmmd(m, iterations)
+    elif method == "fmmd-w":
+        d = fmmd(m, iterations, weight_opt=True)
+    elif method == "fmmd-p":
+        d = fmmd(m, iterations, categories=categories, kappa=kappa,
+                 priority=True)
+    elif method == "fmmd-wp":
+        d = fmmd_wp(m, iterations, categories, kappa)
+    elif method == "clique":
+        d = clique_design(m)
+    elif method == "ring":
+        d = ring_design(m)
+    elif method == "prim":
+        if overlay is None:
+            raise ValueError("prim needs the overlay (path structure)")
+        d = prim_design(overlay)
+    elif method == "sca":
+        d = sca_design(m, categories, kappa, constants)
+    else:
+        raise ValueError(f"unknown design method: {method}")
+    return evaluate_design(
+        d, categories, kappa, m, constants, optimize_routing
+    )
+
+
+def sweep_iterations(
+    categories: Categories,
+    kappa: float,
+    num_agents: int,
+    iteration_grid: Sequence[int] = (4, 8, 12, 16, 24, 32),
+    constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
+) -> DesignOutcome:
+    """Outer search over FMMD-WP's T for the best total-time design."""
+    best: DesignOutcome | None = None
+    for t in iteration_grid:
+        out = design(
+            "fmmd-wp", categories, kappa, num_agents,
+            iterations=t, constants=constants,
+        )
+        if np.isfinite(out.total_time) and (
+            best is None or out.total_time < best.total_time
+        ):
+            best = out
+    if best is None:
+        raise RuntimeError("no finite design found; widen iteration_grid")
+    return best

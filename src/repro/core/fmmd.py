@@ -1,0 +1,183 @@
+"""Frank-Wolfe Mixing Matrix Design — FMMD and variants (paper Alg. 1).
+
+Minimizes ρ(W) = ‖W − J‖ over conv(S⁺), the convex hull of the swapping
+matrices plus identity (Lemma III.4): after T Frank-Wolfe iterations the
+solution combines ≤ T atoms, hence activates ≤ T overlay links, which
+bounds the per-iteration communication time (Theorem III.5):
+
+    τ(W^(T)) · K(ρ(W^(T))) ≤ (κT/C_min) · K((m−3)/m + 16/(T+2)).
+
+Variants (paper §III-B2, "Further Improvements"):
+  * FMMD-W  — re-optimize the weights on the selected support via (14).
+  * FMMD-P  — restrict the atom search (19) to unselected atoms that
+    minimize the default-path time bound τ̄ (22)-(23).
+  * FMMD-WP — both (the paper's headline algorithm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import mixing
+from repro.core.weight_opt import optimize_weights
+from repro.net.categories import Categories
+
+
+@dataclasses.dataclass(frozen=True)
+class FMMDResult:
+    matrix: np.ndarray
+    activated_links: tuple[tuple[int, int], ...]
+    rho: float
+    rho_trajectory: tuple[float, ...]
+    selected_atoms: tuple[tuple[int, int] | None, ...]  # None = identity atom
+    design_seconds: float
+    variant: str
+
+
+def _tau_bar(
+    links: frozenset, categories: Categories, kappa: float
+) -> float:
+    """τ̄(W) of eq. (22): completion time under default-path routing.
+
+    ``links`` holds undirected activated links; each contributes both
+    directed unicast flows (i→j and j→i) to its categories.
+    """
+    uses = {}
+    for (i, j) in links:
+        uses[(i, j)] = 1
+        uses[(j, i)] = 1
+    return categories.completion_time(uses, kappa)
+
+
+def fmmd(
+    m: int,
+    iterations: int,
+    categories: Categories | None = None,
+    kappa: float = 1.0,
+    weight_opt: bool = False,
+    priority: bool = False,
+    allowed_links: Sequence[tuple[int, int]] | None = None,
+) -> FMMDResult:
+    """Run FMMD (Alg. 1) with optional -W / -P improvements.
+
+    ``allowed_links`` restricts the atom set for non-fully-connected
+    overlays (paper footnote 1). ``categories``/``kappa`` are required
+    when ``priority=True`` (the τ̄ bound needs network knowledge).
+    """
+    if priority and categories is None:
+        raise ValueError("FMMD-P needs categories (τ̄ bound)")
+    t0 = time.perf_counter()
+
+    if allowed_links is None:
+        atoms = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    else:
+        atoms = [tuple(sorted(l)) for l in allowed_links]
+
+    w = np.eye(m)  # W^(0) = I (an atom in S⁺)
+    selected: list[tuple[int, int] | None] = []
+    selected_links: set[tuple[int, int]] = set()
+    trajectory: list[float] = [mixing.rho(w)]
+
+    for k in range(iterations):
+        grad = mixing.rho_gradient(w)  # eq. (18)
+        gamma = 2.0 / (k + 2.0)
+
+        # Inner products <S, ∇ρ> for all atoms (eq. 19):
+        #   <I, G> = tr(G);  <S^(i,j), G> = tr(G) − (G_ii + G_jj − 2 G_ij).
+        tr = float(np.trace(grad))
+        scores = {None: tr}
+        for (i, j) in atoms:
+            scores[(i, j)] = tr - (grad[i, i] + grad[j, j] - 2.0 * grad[i, j])
+
+        if priority:
+            # (23): among UNSELECTED atoms, keep only those minimizing the
+            # τ̄ of the tentative iterate. The identity atom constructs
+            # W^(0), so it is in S(W^(k)) from the start and is excluded —
+            # otherwise it would always win (it never increases τ̄) and the
+            # algorithm would stall.
+            unselected = [a for a in atoms if a not in selected_links]
+            if unselected:
+                taus = {
+                    a: _tau_bar(
+                        frozenset(selected_links | {a}), categories, kappa
+                    )
+                    for a in unselected
+                }
+                best_tau = min(taus.values())
+                candidates = [
+                    a for a, t in taus.items() if t <= best_tau + 1e-15
+                ]
+            else:  # every link already activated: fall back to full search
+                candidates = [None] + atoms
+        else:
+            candidates = [None] + atoms
+
+        atom = min(candidates, key=lambda a: scores[a])
+        s = (
+            np.eye(m)
+            if atom is None
+            else mixing.swapping_matrix(m, atom[0], atom[1])
+        )
+        w = (1.0 - gamma) * w + gamma * s
+        selected.append(atom)
+        if atom is not None:
+            selected_links.add(atom)
+        trajectory.append(mixing.rho(w))
+
+    links = tuple(sorted(selected_links))
+    variant = "FMMD" + ("-W" if weight_opt else "") + ("-P" if priority else "")
+    if weight_opt and links:
+        res = optimize_weights(m, links)
+        w = res.matrix
+        # weight optimization may zero out some links; recompute support
+        links_w, _ = mixing.weights_from_matrix(w)
+        links = tuple(links_w)
+    mixing.validate_mixing(w)
+    return FMMDResult(
+        matrix=w,
+        activated_links=links,
+        rho=mixing.rho(w),
+        rho_trajectory=tuple(trajectory),
+        selected_atoms=tuple(selected),
+        design_seconds=time.perf_counter() - t0,
+        variant=variant.replace("-W-P", "-WP"),
+    )
+
+
+def fmmd_wp(
+    m: int,
+    iterations: int,
+    categories: Categories,
+    kappa: float,
+    allowed_links: Sequence[tuple[int, int]] | None = None,
+) -> FMMDResult:
+    """FMMD-WP — the paper's best-performing variant."""
+    return fmmd(
+        m,
+        iterations,
+        categories=categories,
+        kappa=kappa,
+        weight_opt=True,
+        priority=True,
+        allowed_links=allowed_links,
+    )
+
+
+def theorem35_bound(
+    m: int,
+    iterations: int,
+    c_min: float,
+    kappa: float,
+    constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
+) -> float:
+    """Right-hand side of the Theorem III.5 guarantee (eq. 20)."""
+    if m <= 3 or iterations <= 16 * m / 3 - 2:
+        raise ValueError("bound requires m > 3 and T > 16m/3 − 2")
+    rho_bound = (m - 3.0) / m + 16.0 / (iterations + 2.0)
+    return (kappa * iterations / c_min) * mixing.iterations_to_converge(
+        rho_bound, m, constants
+    )

@@ -1,0 +1,4 @@
+"""Data: synthetic non-IID token streams + sharded prefetch pipeline."""
+
+from repro.data.pipeline import Prefetcher, make_batch_fn
+from repro.data.synthetic import DataConfig, SyntheticTokenStream

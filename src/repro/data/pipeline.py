@@ -1,0 +1,106 @@
+"""Host-side input pipeline: sharded batch assembly + prefetch.
+
+Production shape: each host builds only ITS shard of the global batch
+(process-local agents × local microbatches), places it via
+``jax.device_put`` onto the per-cell NamedShardings, and a small
+background thread keeps ``prefetch`` batches in flight so step N+1's
+host work overlaps step N's device work (one of the standard
+compute/comm overlap levers).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import SyntheticTokenStream
+
+
+def make_batch_fn(
+    stream: SyntheticTokenStream,
+    batch_shapes: Any,
+    vocab_size: int,
+) -> Callable[[int], dict]:
+    """Build the stacked [A, k, mb, S+1] batch dict for one step."""
+    tok_shape = batch_shapes["tokens"].shape
+
+    def fn(step: int) -> dict:
+        a, k, mb, s1 = tok_shape
+        toks = np.stack(
+            [
+                np.stack(
+                    [
+                        stream.batch(agent, step * k + i, mb, s1 - 1)
+                        for i in range(k)
+                    ]
+                )
+                for agent in range(a)
+            ]
+        )
+        batch = {"tokens": toks}
+        if "patch_embeds" in batch_shapes:
+            pe = batch_shapes["patch_embeds"]
+            rng = np.random.default_rng((step, 0xBEEF))
+            batch["patch_embeds"] = rng.standard_normal(pe.shape).astype(
+                np.float32
+            )
+        return batch
+
+    return fn
+
+
+class Prefetcher:
+    """Background-thread prefetch of device-placed batches."""
+
+    def __init__(
+        self,
+        batch_fn: Callable[[int], dict],
+        shardings: Any,
+        start_step: int = 0,
+        prefetch: int = 2,
+    ):
+        self._fn = batch_fn
+        self._shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            host = self._fn(step)
+            dev = jax.device_put(host, self._shardings)
+            try:
+                self._q.put((step, dev), timeout=1.0)
+                step += 1
+            except queue.Full:
+                # retry the same (already built) batch on next loop tick
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, dev), timeout=1.0)
+                        step += 1
+                        break
+                    except queue.Full:
+                        continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        # drain so the worker can exit
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels + jnp oracles. Entry points in repro.kernels.ops."""

@@ -1,0 +1,129 @@
+"""Pallas TPU decode attention: one query vs a long KV cache.
+
+The long_500k serving shape is dominated by streaming the KV cache from
+HBM; this kernel reads K/V exactly once in [block_k, head_dim] VMEM tiles
+with an online-softmax accumulator, so the op runs at HBM bandwidth.
+
+grid = (batch·q_heads, S_cache/block_k); the (1, head_dim) query block is
+revisited across the k sweep; `length` masks invalid (unwritten) cache
+slots so ring buffers and partially-filled caches work unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, softcap: float | None, block_k: int, num_kb: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1
+    )
+    mask = k_pos < length
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # [1, d]
+        k = k_ref[0].astype(jnp.float32)               # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # [1, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)               # [bk, d]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_kb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,        # [B, H, 1, D]
+    k: jnp.ndarray,        # [B, KV, S, D]
+    v: jnp.ndarray,        # [B, KV, S, D]
+    length: jnp.ndarray,   # [] or [B] — number of valid cache slots
+    *,
+    softcap: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, h, one, d = q.shape
+    _, kv, s, _ = k.shape
+    group = h // kv
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError("cache length must divide block_k")
+    nk = s // block_k
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    qf = q.reshape(b * h, 1, d)
+    kf = k.reshape(b * kv, s, d)
+    vf = v.reshape(b * kv, s, d)
+
+    def q_index(bh, ik):
+        return (bh, 0, 0)
+
+    def kv_index(bh, ik):
+        return ((bh // h) * kv + (bh % h) // group, ik, 0)
+
+    def len_index(bh, ik):
+        return (bh // h,)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=d**-0.5, softcap=softcap, block_k=block_k, num_kb=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nk),
+        in_specs=[
+            pl.BlockSpec((1,), len_index, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), q_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), q_index),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qf, kf, vf)
+    return out.reshape(b, h, 1, d)

@@ -1,0 +1,1 @@
+"""Launch: mesh, sharding rules, distributed train/serve, dry-run."""

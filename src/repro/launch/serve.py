@@ -1,0 +1,144 @@
+"""Distributed serving: prefill and decode steps (no agents — pure TP/DP).
+
+``decode_32k`` / ``long_500k`` lower ``serve_step`` (one new token against
+a seq_len-deep KV cache); ``prefill_32k`` lowers the prompt pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as shard_rules
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeArtifacts:
+    step_fn: Callable            # decode: (params, caches, token) -> (logits, caches)
+    prefill_fn: Callable | None  # (params, inputs) -> (logits, caches)
+    param_shapes: Any
+    cache_shapes: Any
+    input_shapes: Any
+    param_shardings: Any
+    cache_shardings: Any
+    input_shardings: Any
+
+    def jit(self, donate: bool = True):
+        """Steady-state decode jit: caches round-trip on their shardings
+        (donated); logits sharding left to the partitioner."""
+        if self.step_fn is None:
+            return jax.jit(
+                self.prefill_fn,
+                in_shardings=(self.param_shardings, self.input_shardings),
+                out_shardings=(None, self.cache_shardings),
+            )
+        return jax.jit(
+            self.step_fn,
+            in_shardings=(
+                self.param_shardings,
+                self.cache_shardings,
+                self.input_shardings,
+            ),
+            out_shardings=(None, self.cache_shardings),
+            donate_argnums=(1,) if donate else (),
+        )
+
+    def lower(self):
+        if self.step_fn is None:
+            return self.jit().lower(self.param_shapes, self.input_shapes)
+        return self.jit(donate=False).lower(
+            self.param_shapes, self.cache_shapes, self.input_shapes
+        )
+
+
+def build_serve_artifacts(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: jax.sharding.Mesh
+) -> ServeArtifacts:
+    b, s = shape.global_batch, shape.seq_len
+    param_shapes = jax.eval_shape(lambda k: M.init(cfg, k), jax.random.key(0))
+    param_specs = shard_rules.param_specs_serve(param_shapes, mesh, cfg)
+    to_sh = lambda specs: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), specs,
+        is_leaf=lambda sp: isinstance(sp, P),
+    )
+
+    from repro.models.sharding_hints import hints
+
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+    role_axes = {
+        "batch": batch_axes if (b % bsz == 0 and b >= bsz) else (),
+        "tp": ("model",),
+        "seq": ("model",),
+    }
+
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: M.init_caches(cfg, b, s)
+        )
+        cache_specs = shard_rules.cache_specs_serve(cache_shapes, mesh, cfg)
+        token_shape = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        token_spec = shard_rules.token_specs_serve(token_shape, mesh)
+
+        def step_fn(params, caches, token):
+            with hints(role_axes):
+                return M.decode_step(cfg, params, caches, token)
+
+        return ServeArtifacts(
+            step_fn=step_fn,
+            prefill_fn=None,
+            param_shapes=param_shapes,
+            cache_shapes=cache_shapes,
+            input_shapes=token_shape,
+            param_shardings=to_sh(param_specs),
+            cache_shardings=to_sh(cache_specs),
+            input_shardings=NamedSharding(mesh, token_spec),
+        )
+
+    # prefill
+    inputs_shapes: dict = {}
+    if cfg.frontend == "vision_patches":
+        text = s - cfg.num_patches
+        inputs_shapes["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        inputs_shapes["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.bfloat16
+        )
+    else:
+        inputs_shapes["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    baxis = (
+        (batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        if role_axes["batch"]
+        else None
+    )
+    input_specs = jax.tree.map(
+        lambda x: P(baxis, *([None] * (len(x.shape) - 1))), inputs_shapes
+    )
+
+    def prefill_fn(params, inputs):
+        with hints(role_axes):
+            return M.prefill(cfg, params, inputs, max_len=s)
+
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_caches(cfg, b, s)
+    )
+    cache_specs = shard_rules.cache_specs_serve(cache_shapes, mesh, cfg)
+    return ServeArtifacts(
+        step_fn=None,
+        prefill_fn=prefill_fn,
+        param_shapes=param_shapes,
+        cache_shapes=cache_shapes,
+        input_shapes=inputs_shapes,
+        param_shardings=to_sh(param_specs),
+        cache_shardings=to_sh(cache_specs),
+        input_shardings=to_sh(input_specs),
+    )

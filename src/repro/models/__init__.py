@@ -1,0 +1,1 @@
+"""Model substrate: unified decoder over heterogeneous block patterns."""

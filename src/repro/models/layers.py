@@ -1,0 +1,124 @@
+"""Shared neural-net layers (pure JAX, no flax): norms, projections, RoPE.
+
+All parameters are plain pytrees of jnp arrays. Initializers take an
+explicit key. ``param_dtype`` controls storage, ``compute_dtype`` the
+activation math (mixed precision: bf16 compute is the TPU default).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    # 1/sqrt(fan_in)-style scaling is applied by callers via `scale`.
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(
+        dtype
+    )
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> dict:
+    w = truncated_normal_init(key, (d_in, d_out), d_in**-0.5, dtype)
+    return {"kernel": w}
+
+
+def dense_init_bias(key, d_in: int, d_out: int, dtype) -> dict:
+    p = dense_init(key, d_in, d_out, dtype)
+    p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(params: dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    y = x.astype(compute_dtype) @ params["kernel"].astype(compute_dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(compute_dtype)
+    return y
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    return {
+        "table": truncated_normal_init(
+            key, (vocab, d_model), d_model**-0.5, dtype
+        )
+    }
+
+
+def embed_apply(params: dict, ids: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def unembed_apply(params: dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    """Project to vocab logits with the (possibly tied) embedding table."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(compute_dtype),
+        params["table"].astype(compute_dtype),
+    )
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(
+    params: dict, x: jnp.ndarray, eps: float, compute_dtype
+) -> jnp.ndarray:
+    # Normalize in fp32 for stability, multiply in compute dtype.
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(compute_dtype) * params["scale"].astype(
+        compute_dtype
+    )
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    """Gemma2-style logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # [head_dim/2]
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..,S,hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    gate = jax.nn.silu(dense_apply(params["gate"], x, compute_dtype))
+    up = dense_apply(params["up"], x, compute_dtype)
+    return dense_apply(params["down"], gate * up, compute_dtype)

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based dispatch.
+
+TPU-native, static-shape formulation: tokens are routed to experts by
+sorting each row's (token, choice) list by expert id; dispatch/combine
+are expressed as row-wise GATHERS (``take_along_axis``), with scatters
+confined to small integer index vectors — GSPMD partitions batched
+gathers cleanly, while scatters on [*, D] tensors were measured
+replicating 43 GB dispatch buffers at prefill scale.
+
+The batch dim is handled explicitly (no vmap) so every wide intermediate
+([B, E·C, D], [B, E, C, F]) can be pinned to the batch sharding via
+repro.models.sharding_hints. Capacity C = ceil(S·top_k/E·cf) per row;
+overflow tokens are dropped (standard). Aux: Switch load-balance +
+router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding_hints import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def init(key, spec: MoESpec, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = spec.num_experts, spec.d_model, spec.d_ff
+    return {
+        "router": layers.dense_init(kr, d, e, dtype),
+        # Stacked expert SwiGLU weights: [E, d, f] / [E, f, d].
+        "gate": layers.truncated_normal_init(kg, (e, d, f), d**-0.5, dtype),
+        "up": layers.truncated_normal_init(ku, (e, d, f), d**-0.5, dtype),
+        "down": layers.truncated_normal_init(kd, (e, f, d), f**-0.5, dtype),
+    }
+
+
+def capacity(tokens: int, spec: MoESpec) -> int:
+    c = int(tokens * spec.top_k / spec.num_experts * spec.capacity_factor)
+    return max(c, spec.top_k)
+
+
+def apply(
+    params: dict, x: jnp.ndarray, spec: MoESpec, compute_dtype
+) -> tuple[jnp.ndarray, dict]:
+    """x: [B, S, D] -> (y, aux); aux = {load_balance_loss, router_z_loss}.
+
+    Dispatch groups are batch rows: capacity is per row and routing never
+    crosses rows, so under batch sharding all index math stays on-chip.
+    """
+    b, n, d = x.shape
+    e, k = spec.num_experts, spec.top_k
+    cap = capacity(n, spec)
+    xt = constrain(x.astype(compute_dtype), ("batch", None, None))
+
+    router_logits = layers.dense_apply(params["router"], xt, jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [b, n, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- per-row sort by expert id --------------------------------------
+    flat_expert = expert_idx.reshape(b, n * k)
+    order = jnp.argsort(flat_expert, axis=-1)                # [b, nk]
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=-1)
+    # Position within each expert's run: index − first index of the run.
+    ar = jnp.broadcast_to(jnp.arange(n * k), (b, n * k))
+    change = jnp.concatenate(
+        [
+            jnp.ones((b, 1), bool),
+            sorted_expert[:, 1:] != sorted_expert[:, :-1],
+        ],
+        axis=-1,
+    )
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(change, ar, 0), axis=-1
+    )
+    positions = ar - run_start
+    keep = positions < cap
+    slot = sorted_expert * cap + positions                   # [b, nk]
+
+    # slot -> source token (int scatter per row; sentinel n drops).
+    rows = jnp.arange(b)[:, None]
+    token_for_slot = jnp.full((b, e * cap), n, jnp.int32)
+    token_for_slot = token_for_slot.at[
+        rows, jnp.where(keep, slot, e * cap)
+    ].set((order // k).astype(jnp.int32), mode="drop", unique_indices=True)
+    # (token, choice) -> slot (sentinel E·C).
+    slot_for_choice = jnp.full((b, n * k), e * cap, jnp.int32)
+    slot_for_choice = slot_for_choice.at[rows, order].set(
+        jnp.where(keep, slot, e * cap).astype(jnp.int32),
+        unique_indices=True,
+    )
+
+    # ---- dispatch gather -------------------------------------------------
+    xt_pad = jnp.concatenate(
+        [xt, jnp.zeros((b, 1, d), compute_dtype)], axis=1
+    )
+    xin = jnp.take_along_axis(
+        xt_pad, token_for_slot[..., None], axis=1
+    )                                                        # [b, E·C, d]
+    xin = constrain(xin, ("batch", None, None)).reshape(b, e, cap, d)
+
+    # ---- expert SwiGLU ---------------------------------------------------
+    # Prefill-scale groups: loop experts sequentially (same FLOPs, E× less
+    # live memory); training-scale groups stay vectorized for EP.
+    if cap * spec.d_ff > 128 * 1024 * 1024:
+        def one_expert(args):
+            xe, wg, wu, wd = args                            # xe: [b,cap,d]
+            g = jax.nn.silu(xe @ wg.astype(compute_dtype))
+            u = xe @ wu.astype(compute_dtype)
+            return (g * u) @ wd.astype(compute_dtype)
+
+        yout = jax.lax.map(
+            one_expert,
+            (
+                jnp.moveaxis(xin, 1, 0),
+                params["gate"], params["up"], params["down"],
+            ),
+        )                                                    # [e, b, cap, d]
+        yout = jnp.moveaxis(yout, 0, 1)
+    else:
+        gate = jax.nn.silu(
+            jnp.einsum(
+                "becd,edf->becf", xin, params["gate"].astype(compute_dtype)
+            )
+        )
+        up = jnp.einsum(
+            "becd,edf->becf", xin, params["up"].astype(compute_dtype)
+        )
+        yout = jnp.einsum(
+            "becf,efd->becd", gate * up,
+            params["down"].astype(compute_dtype),
+        )
+    yout = constrain(
+        yout.reshape(b, e * cap, d), ("batch", None, None)
+    )
+
+    # ---- combine gather ---------------------------------------------------
+    yout_pad = jnp.concatenate(
+        [yout, jnp.zeros((b, 1, d), compute_dtype)], axis=1
+    )
+    per_choice = jnp.take_along_axis(
+        yout_pad, slot_for_choice[..., None], axis=1
+    ).reshape(b, n, k, d)
+    y = jnp.einsum(
+        "bnk,bnkd->bnd", gate_vals.astype(compute_dtype), per_choice
+    )
+    y = constrain(y, ("batch", None, None))
+
+    # ---- aux losses --------------------------------------------------------
+    me = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32),
+        axis=(0, 1),
+    )
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce),
+        "router_z_loss": jnp.mean(
+            jnp.square(jax.nn.logsumexp(router_logits, axis=-1))
+        ),
+    }
+    return y, aux
+
+
+def apply_dense_reference(
+    params: dict, x: jnp.ndarray, spec: MoESpec, compute_dtype
+) -> jnp.ndarray:
+    """No-capacity loop-over-experts oracle (tests only; O(n·E·d·f))."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d).astype(compute_dtype)
+    logits = layers.dense_apply(params["router"], xt, jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, spec.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    y = jnp.zeros_like(xt)
+    for ei in range(spec.num_experts):
+        g = jax.nn.silu(xt @ params["gate"][ei].astype(compute_dtype))
+        u = xt @ params["up"][ei].astype(compute_dtype)
+        o = (g * u) @ params["down"][ei].astype(compute_dtype)
+        w = jnp.sum(
+            jnp.where(expert_idx == ei, gate_vals, 0.0), axis=-1
+        ).astype(compute_dtype)
+        y = y + o * w[:, None]
+    return y.reshape(b, s, d)

@@ -1,0 +1,30 @@
+"""Network substrate: underlay/overlay model, categories, routing, simulation."""
+
+from repro.net.categories import Categories, compute_categories, infer_categories
+from repro.net.demands import (
+    MulticastDemand,
+    activated_links_from_matrix,
+    demands_from_links,
+)
+from repro.net.routing import (
+    RoutingSolution,
+    route,
+    route_congestion_aware,
+    route_direct,
+    route_milp,
+)
+from repro.net.simulator import SimResult, lemma31_time, simulate
+from repro.net.topology import (
+    MBPS,
+    PAPER_MODEL_BYTES,
+    OverlayNetwork,
+    Underlay,
+    build_overlay,
+    dumbbell_underlay,
+    grid_underlay,
+    ici_torus_underlay,
+    line_underlay,
+    lowest_degree_nodes,
+    random_geometric_underlay,
+    roofnet_like,
+)

@@ -1,0 +1,119 @@
+"""Underlay-link categories (paper Definition 1) and their inference.
+
+A *category* Γ_F, for a set F of overlay links, is the set of underlay
+links traversed by **exactly** the overlay links in F. All links in one
+category carry identical overlay traffic, so the per-iteration time only
+depends on category-level quantities (Lemma III.2):
+
+    τ = max_{F ∈ 𝓕} (κ / C_F) · t_F,   C_F = min_{e ∈ Γ_F} C_e .
+
+We compute categories on **directed** overlay links (the paper's footnote:
+capacity constraints are per direction), which generalizes (12) cleanly:
+a directed underlay edge (u, v) belongs to the category of the set of
+directed overlay links whose routing path traverses (u, v).
+
+Two access paths:
+  * ``compute_categories``   — ground truth from full underlay knowledge.
+  * ``infer_categories``     — what an uncooperative underlay permits: the
+    overlay can consistently estimate (𝓕, C_F) via tomography [17]. We
+    model the estimator output (optionally capacity noise); on real
+    deployments this would be replaced by the measurement pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from repro.net.topology import OverlayNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class Categories:
+    """Nonempty categories 𝓕 over *directed* overlay links.
+
+    ``members[F]``  — the underlay directed edges in Γ_F (may be empty in
+                      inferred mode, where only capacities are known).
+    ``capacity[F]`` — bottleneck capacity C_F = min_{e ∈ Γ_F} C_e.
+    Keys F are frozensets of directed overlay links (agent-index pairs).
+    """
+
+    members: Mapping[frozenset, tuple[tuple[int, int], ...]]
+    capacity: Mapping[frozenset, float]
+
+    @property
+    def families(self) -> tuple[frozenset, ...]:
+        return tuple(self.capacity.keys())
+
+    def min_capacity(self) -> float:
+        """C_min := min_F C_F (Theorem III.5)."""
+        return min(self.capacity.values())
+
+    def load_vector(self, link_uses: Mapping[tuple[int, int], int]) -> dict:
+        """t_F for a map of directed-overlay-link -> #activated flows (10)."""
+        return {
+            F: sum(link_uses.get(l, 0) for l in F) for F in self.families
+        }
+
+    def completion_time(
+        self, link_uses: Mapping[tuple[int, int], int], kappa: float
+    ) -> float:
+        """Closed-form optimal completion time (Lemma III.2, eq. (11))."""
+        t = self.load_vector(link_uses)
+        return max(
+            (kappa * t[F] / self.capacity[F] for F in self.families),
+            default=0.0,
+        )
+
+
+def compute_categories(overlay: OverlayNetwork) -> Categories:
+    """Ground-truth categories from full knowledge of the underlay.
+
+    For every directed underlay edge, collect the set of directed overlay
+    links routed over it; group edges by that set.
+    """
+    edge_to_links: dict[tuple[int, int], set] = {}
+    for i, j in overlay.directed_overlay_links:
+        for e in overlay.path_edges(i, j):
+            edge_to_links.setdefault(e, set()).add((i, j))
+
+    members: dict[frozenset, list] = {}
+    capacity: dict[frozenset, float] = {}
+    for e, links in edge_to_links.items():
+        F = frozenset(links)
+        members.setdefault(F, []).append(e)
+        c = overlay.underlay.capacity(*e)
+        capacity[F] = min(capacity.get(F, np.inf), c)
+
+    return Categories(
+        members={F: tuple(v) for F, v in members.items()},
+        capacity=capacity,
+    )
+
+
+def infer_categories(
+    overlay: OverlayNetwork,
+    capacity_noise: float = 0.0,
+    seed: int = 0,
+) -> Categories:
+    """Tomography-style estimate of (𝓕, C_F) available to the overlay.
+
+    [17] shows the overlay can *consistently* estimate the nonempty
+    categories and each category's bottleneck capacity from end-to-end
+    measurements alone. We model the estimator's output: exact category
+    structure, with optional multiplicative noise on capacities to stress
+    designs against estimation error (``capacity_noise`` = relative std).
+    Members are withheld — the overlay never learns which physical links
+    form Γ_F, matching the information model of §III-A3.
+    """
+    truth = compute_categories(overlay)
+    rng = np.random.default_rng(seed)
+    cap = {}
+    for F, c in truth.capacity.items():
+        noise = 1.0 + capacity_noise * rng.standard_normal()
+        cap[F] = float(max(c * noise, 1e-9))
+    return Categories(
+        members={F: () for F in truth.capacity}, capacity=cap
+    )

@@ -1,0 +1,188 @@
+"""Fluid-level simulation of multicast completion times on the underlay.
+
+Validates Lemma III.1/III.2 numerically: under equal bandwidth sharing at
+every underlay link, the makespan for equal-size demands equals
+
+    τ = max_e κ · t_e / C_e .
+
+The simulator is event-driven with max-min fair rate allocation (what TCP
+approximates): at each event, remaining flows receive max-min fair rates
+given the underlay capacities; the next completion is advanced to. The
+multicast flow h completes when its slowest unicast branch finishes; a
+branch's traffic occupies every underlay edge of its (possibly relayed)
+overlay path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.net.demands import MulticastDemand
+from repro.net.routing import RoutingSolution
+from repro.net.topology import OverlayNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    makespan: float
+    flow_completion: tuple[float, ...]  # per multicast demand
+    num_events: int
+
+
+def _unicast_branches(
+    sol: RoutingSolution, overlay: OverlayNetwork
+) -> list[tuple[int, tuple[tuple[int, int], ...]]]:
+    """Expand each flow's tree into unicast branches over underlay edges.
+
+    Each directed overlay link (i, j) in flow h's tree is an activated
+    unicast flow carrying h's content over the underlay path p_{i,j}
+    (paper Lemma III.1's definition).
+    """
+    branches = []
+    for h, tree in enumerate(sol.trees):
+        for (i, j) in tree:
+            branches.append((h, overlay.path_edges(i, j)))
+    return branches
+
+
+def _maxmin_rates(
+    active: Sequence[int],
+    branch_edges: Sequence[tuple[tuple[int, int], ...]],
+    capacity: Mapping[tuple[int, int], float],
+) -> np.ndarray:
+    """Progressive-filling max-min fair rates for the active branches."""
+    n = len(active)
+    rates = np.zeros(n)
+    frozen = np.zeros(n, dtype=bool)
+    cap_left = dict(capacity)
+    # Count active branches per edge.
+    while not frozen.all():
+        counts: dict[tuple[int, int], int] = {}
+        for a in range(n):
+            if frozen[a]:
+                continue
+            for e in branch_edges[active[a]]:
+                counts[e] = counts.get(e, 0) + 1
+        # Bottleneck edge: smallest fair share among remaining capacity.
+        share, bottleneck = math.inf, None
+        for e, cnt in counts.items():
+            s = cap_left[e] / cnt
+            if s < share:
+                share, bottleneck = s, e
+        if bottleneck is None:
+            break
+        # Freeze all unfrozen branches crossing the bottleneck at `share`.
+        for a in range(n):
+            if frozen[a]:
+                continue
+            if bottleneck in branch_edges[active[a]]:
+                rates[a] = share
+                frozen[a] = True
+                for e in branch_edges[active[a]]:
+                    cap_left[e] -= share
+    return rates
+
+
+def _equal_share_rates(
+    active: Sequence[int],
+    branch_edges: Sequence[tuple[tuple[int, int], ...]],
+    capacity: Mapping[tuple[int, int], float],
+) -> np.ndarray:
+    """Static equal sharing: every edge splits capacity evenly among its
+    crossing branches; a branch gets its min share along the path
+    (the allocation of Lemma III.1's achievability argument)."""
+    counts: dict[tuple[int, int], int] = {}
+    for a in active:
+        for e in branch_edges[a]:
+            counts[e] = counts.get(e, 0) + 1
+    rates = np.empty(len(active))
+    for idx, a in enumerate(active):
+        rates[idx] = min(capacity[e] / counts[e] for e in branch_edges[a])
+    return rates
+
+
+def simulate(
+    sol: RoutingSolution,
+    overlay: OverlayNetwork,
+    fairness: str = "maxmin",
+    max_events: int = 100_000,
+) -> SimResult:
+    """Simulate completion of all multicast demands under ``sol``.
+
+    fairness: "maxmin" (TCP-like, dynamic reallocation on completions) or
+    "equal" (static equal split, re-evaluated on completions).
+    """
+    branches = _unicast_branches(sol, overlay)
+    if not branches:
+        return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
+
+    # Directed underlay edge capacities (each direction independent).
+    capacity: dict[tuple[int, int], float] = {}
+    for u, v, data in overlay.underlay.graph.edges(data=True):
+        capacity[(u, v)] = float(data["capacity"])
+        capacity[(v, u)] = float(data["capacity"])
+
+    n = len(branches)
+    remaining = np.array([sol.demands[h].size for h, _ in branches])
+    done_time = np.full(n, np.nan)
+    branch_edges = [edges for _, edges in branches]
+    t = 0.0
+    events = 0
+    alloc = _maxmin_rates if fairness == "maxmin" else _equal_share_rates
+
+    active = [a for a in range(n)]
+    while active and events < max_events:
+        rates = alloc(active, branch_edges, capacity)
+        if not np.any(rates > 0):
+            raise RuntimeError("starved branches; invalid routing/capacities")
+        dt = np.min(remaining[active] / np.maximum(rates, 1e-300))
+        t += dt
+        remaining[active] -= rates * dt
+        still = []
+        for idx, a in enumerate(active):
+            if remaining[a] <= 1e-9 * sol.demands[branches[a][0]].size:
+                done_time[a] = t
+            else:
+                still.append(a)
+        active = still
+        events += 1
+
+    flow_completion = []
+    for h in range(len(sol.demands)):
+        ts = [done_time[a] for a in range(n) if branches[a][0] == h]
+        flow_completion.append(max(ts) if ts else 0.0)
+    return SimResult(
+        makespan=float(np.nanmax(done_time)),
+        flow_completion=tuple(float(x) for x in flow_completion),
+        num_events=events,
+    )
+
+
+def per_edge_loads(
+    sol: RoutingSolution, overlay: OverlayNetwork
+) -> dict[tuple[int, int], int]:
+    """t_e per directed underlay edge (eq. 6) — for Lemma III.1 checks."""
+    loads: dict[tuple[int, int], int] = {}
+    for h, tree in enumerate(sol.trees):
+        for (i, j) in tree:
+            for e in overlay.path_edges(i, j):
+                loads[e] = loads.get(e, 0) + 1
+    return loads
+
+
+def lemma31_time(
+    sol: RoutingSolution, overlay: OverlayNetwork, kappa: float
+) -> float:
+    """Closed-form τ = max_e κ t_e / C_e from link-level knowledge (eq. 7)."""
+    loads = per_edge_loads(sol, overlay)
+    return max(
+        (
+            kappa * t / overlay.underlay.capacity(*e)
+            for e, t in loads.items()
+        ),
+        default=0.0,
+    )

@@ -1,0 +1,259 @@
+"""Underlay / overlay network model.
+
+The *underlay* is the physical communication network (e.g. a WiFi mesh);
+the *overlay* is the logical network formed by the learning agents, where
+each overlay link (i, j) is realized by an underlay routing path p_{i,j}.
+
+Conventions
+-----------
+* Underlay nodes are integers (networkx node ids).
+* Agents are referenced by **index** 0..m-1 in all algorithm-facing code;
+  ``OverlayNetwork.agents[idx]`` maps back to the underlay node id.
+* Overlay links are unordered pairs ``(i, j)`` with ``i < j`` of agent
+  indices. Directed overlay links are ordered pairs ``(i, j)``, i != j.
+* Underlay links are undirected with symmetric capacity ``capacity``
+  (bytes/second); each *direction* has the full capacity (paper §II-B).
+* Routing paths are symmetric: ``p[i,j] == reversed(p[j,i])``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Mapping, Sequence
+
+import networkx as nx
+import numpy as np
+
+# 1 Mbps in bytes/second (Roofnet data rate, paper §IV-A2).
+MBPS = 125_000.0
+
+# ResNet-50 model size used in the paper (94.47 MB), bytes.
+PAPER_MODEL_BYTES = 94.47e6
+
+
+@dataclasses.dataclass(frozen=True)
+class Underlay:
+    """Physical network: an undirected capacitated graph."""
+
+    graph: nx.Graph
+
+    @property
+    def num_nodes(self) -> int:
+        return self.graph.number_of_nodes()
+
+    @property
+    def num_links(self) -> int:
+        return self.graph.number_of_edges()
+
+    def capacity(self, u: int, v: int) -> float:
+        return float(self.graph.edges[u, v]["capacity"])
+
+    def shortest_path(self, src: int, dst: int) -> tuple[int, ...]:
+        """Hop-count shortest path (paper assumes hop-count routing)."""
+        return tuple(nx.shortest_path(self.graph, src, dst))
+
+    def validate(self) -> None:
+        if not nx.is_connected(self.graph):
+            raise ValueError("underlay must be connected")
+        for u, v, data in self.graph.edges(data=True):
+            if data.get("capacity", 0) <= 0:
+                raise ValueError(f"link ({u},{v}) has non-positive capacity")
+
+
+def _path_edges_directed(path: Sequence[int]) -> tuple[tuple[int, int], ...]:
+    """Directed underlay edges along a node path."""
+    return tuple((path[k], path[k + 1]) for k in range(len(path) - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlayNetwork:
+    """Overlay of m agents atop an underlay, with fixed symmetric routing.
+
+    ``paths[(i, j)]`` (agent indices, any order) is the underlay node path
+    from agent i's node to agent j's node.
+    """
+
+    underlay: Underlay
+    agents: tuple[int, ...]  # agent index -> underlay node id
+    paths: Mapping[tuple[int, int], tuple[int, ...]]
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.agents)
+
+    @property
+    def overlay_links(self) -> tuple[tuple[int, int], ...]:
+        """All undirected overlay links (full overlay), i < j, agent indices."""
+        m = self.num_agents
+        return tuple((i, j) for i in range(m) for j in range(i + 1, m))
+
+    @property
+    def directed_overlay_links(self) -> tuple[tuple[int, int], ...]:
+        m = self.num_agents
+        return tuple((i, j) for i in range(m) for j in range(m) if i != j)
+
+    def path(self, i: int, j: int) -> tuple[int, ...]:
+        """Underlay node path for directed overlay link i -> j."""
+        if (i, j) in self.paths:
+            return self.paths[(i, j)]
+        return tuple(reversed(self.paths[(j, i)]))
+
+    def path_edges(self, i: int, j: int) -> tuple[tuple[int, int], ...]:
+        """Directed underlay edges traversed by directed overlay link i->j."""
+        return _path_edges_directed(self.path(i, j))
+
+    def propagation_delay(self, i: int, j: int) -> float:
+        """Edge networks: negligible propagation delay (paper §III-A2)."""
+        return 0.0
+
+    def validate(self) -> None:
+        self.underlay.validate()
+        if len(set(self.agents)) != len(self.agents):
+            raise ValueError("duplicate agent placement")
+        for i, j in self.overlay_links:
+            p = self.path(i, j)
+            if p[0] != self.agents[i] or p[-1] != self.agents[j]:
+                raise ValueError(f"path for ({i},{j}) has wrong endpoints")
+            rev = self.path(j, i)
+            if tuple(reversed(rev)) != p:
+                raise ValueError(f"asymmetric path for ({i},{j})")
+
+
+def build_overlay(
+    underlay: Underlay, agent_nodes: Sequence[int]
+) -> OverlayNetwork:
+    """Place agents on ``agent_nodes`` and route via hop-count shortest paths.
+
+    Symmetry is enforced by computing each path once per unordered pair.
+    """
+    agents = tuple(agent_nodes)
+    paths: dict[tuple[int, int], tuple[int, ...]] = {}
+    for i in range(len(agents)):
+        for j in range(i + 1, len(agents)):
+            paths[(i, j)] = underlay.shortest_path(agents[i], agents[j])
+    ov = OverlayNetwork(underlay=underlay, agents=agents, paths=paths)
+    ov.validate()
+    return ov
+
+
+def lowest_degree_nodes(underlay: Underlay, m: int) -> list[int]:
+    """The paper selects the m lowest-degree underlay nodes as agents."""
+    deg = sorted(underlay.graph.degree, key=lambda kv: (kv[1], kv[0]))
+    return [n for n, _ in deg[:m]]
+
+
+# ---------------------------------------------------------------------------
+# Topology generators
+# ---------------------------------------------------------------------------
+
+
+def roofnet_like(
+    seed: int = 0,
+    num_nodes: int = 38,
+    num_links: int = 219,
+    capacity: float = MBPS,
+) -> Underlay:
+    """Roofnet-statistics-matched surrogate (38 nodes, 219 links, 1 Mbps).
+
+    The real Roofnet link-level measurement data is not shipped offline;
+    we generate a random geometric mesh with the same node/link counts and
+    uniform 1 Mbps capacity (paper §IV-A2), deterministic in ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    pts = rng.random((num_nodes, 2))
+    # Distance-ranked candidate edges; take the shortest ones that keep the
+    # graph simple, then repair connectivity, then trim back to num_links.
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    order = sorted(
+        ((i, j) for i in range(num_nodes) for j in range(i + 1, num_nodes)),
+        key=lambda e: d2[e[0], e[1]],
+    )
+    g = nx.Graph()
+    g.add_nodes_from(range(num_nodes))
+    g.add_edges_from(order[:num_links])
+    # Repair connectivity by linking components with their closest node pair.
+    while not nx.is_connected(g):
+        comps = list(nx.connected_components(g))
+        best = None
+        for a, b in itertools.combinations(range(len(comps)), 2):
+            for u in comps[a]:
+                for v in comps[b]:
+                    if best is None or d2[u, v] < d2[best[0], best[1]]:
+                        best = (u, v)
+        g.add_edge(*best)
+    # Trim longest non-bridge edges back down to num_links.
+    extra = g.number_of_edges() - num_links
+    if extra > 0:
+        for u, v in sorted(g.edges, key=lambda e: -d2[e[0], e[1]]):
+            if extra == 0:
+                break
+            g.remove_edge(u, v)
+            if nx.is_connected(g):
+                extra -= 1
+            else:
+                g.add_edge(u, v)
+    nx.set_edge_attributes(g, capacity, "capacity")
+    u = Underlay(graph=g)
+    u.validate()
+    return u
+
+
+def line_underlay(n: int, capacity: float = MBPS) -> Underlay:
+    g = nx.path_graph(n)
+    nx.set_edge_attributes(g, capacity, "capacity")
+    return Underlay(graph=g)
+
+
+def grid_underlay(rows: int, cols: int, capacity: float = MBPS) -> Underlay:
+    g = nx.convert_node_labels_to_integers(nx.grid_2d_graph(rows, cols))
+    nx.set_edge_attributes(g, capacity, "capacity")
+    return Underlay(graph=g)
+
+
+def random_geometric_underlay(
+    n: int, radius: float = 0.35, seed: int = 0, capacity: float = MBPS
+) -> Underlay:
+    """Connected random geometric graph (generic edge-network surrogate)."""
+    for attempt in range(100):
+        g = nx.random_geometric_graph(n, radius, seed=seed + attempt)
+        if nx.is_connected(g):
+            nx.set_edge_attributes(g, capacity, "capacity")
+            return Underlay(graph=nx.Graph(g))
+    raise RuntimeError("could not generate a connected geometric graph")
+
+
+def dumbbell_underlay(
+    left: int = 2, right: int = 2, capacity: float = MBPS
+) -> Underlay:
+    """Two stars joined by one shared bottleneck link (Fig. 2 scenario).
+
+    Nodes 0..left-1 attach to hub L; nodes left..left+right-1 attach to hub
+    R; L—R is the shared bottleneck. Useful for unit tests of link sharing.
+    """
+    g = nx.Graph()
+    hub_l, hub_r = left + right, left + right + 1
+    for i in range(left):
+        g.add_edge(i, hub_l, capacity=capacity)
+    for i in range(left, left + right):
+        g.add_edge(i, hub_r, capacity=capacity)
+    g.add_edge(hub_l, hub_r, capacity=capacity)
+    return Underlay(graph=g)
+
+
+def ici_torus_underlay(
+    x: int, y: int, capacity: float = 50e9
+) -> Underlay:
+    """TPU ICI 2-D torus as an 'underlay' (hardware adaptation, DESIGN §4).
+
+    Each chip is a node; wrap-around links with ~50 GB/s per direction.
+    Lets the paper's congestion machinery reason about gossip schedules on
+    the pod fabric itself.
+    """
+    g = nx.Graph()
+    for i in range(x):
+        for j in range(y):
+            n = i * y + j
+            g.add_edge(n, ((i + 1) % x) * y + j, capacity=capacity)
+            g.add_edge(n, i * y + (j + 1) % y, capacity=capacity)
+    return Underlay(graph=g)

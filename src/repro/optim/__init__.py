@@ -1,0 +1,3 @@
+"""Optimizers and schedules (hand-rolled; optax is not shipped offline)."""
+
+from repro.optim import adamw, schedule, sgd

@@ -1,0 +1,40 @@
+"""AdamW for the non-D-PSGD training paths (examples, ablations)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, dtype=jnp.float32):
+    z = lambda p: jnp.zeros_like(p, dtype=dtype)
+    return {
+        "m": jax.tree.map(z, params),
+        "v": jax.tree.map(z, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(
+    grads, state, params, lr,
+    b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+):
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    m = jax.tree.map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+        state["m"], grads,
+    )
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype)),
+        state["v"], grads,
+    )
+    def upd(p, m_, v_):
+        mh = m_ / (1 - b1**t)
+        vh = v_ / (1 - b2**t)
+        step = lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(mh.dtype))
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+    return (
+        jax.tree.map(upd, params, m, v),
+        {"m": m, "v": v, "count": count},
+    )

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (paper §IV-A1 uses step decay: 0.1 / 0.05 / 0.01)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(boundaries_values):
+    """Piecewise-constant: [(boundary_step, value), ...] sorted ascending.
+
+    ``paper_schedule`` below reproduces the paper's 0.1/0.05/0.01 decay.
+    """
+    bounds = [b for b, _ in boundaries_values]
+    vals = [v for _, v in boundaries_values]
+
+    def fn(step):
+        lr = jnp.asarray(vals[-1], jnp.float32)
+        for b, v in reversed(list(zip(bounds, vals))):
+            lr = jnp.where(step < b, jnp.asarray(v, jnp.float32), lr)
+        return lr
+
+    return fn
+
+
+def paper_schedule(steps_per_epoch: int):
+    """0.1 for 30 epochs, 0.05 for 30, 0.01 after (paper §IV-A1)."""
+    return step_decay(
+        [(30 * steps_per_epoch, 0.1), (60 * steps_per_epoch, 0.05), (10**9, 0.01)]
+    )
+
+
+def cosine(base_lr: float, total_steps: int, warmup: int = 0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+    return fn

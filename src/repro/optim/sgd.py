@@ -1,0 +1,35 @@
+"""SGD with momentum — the D-PSGD base optimizer. Functional optax-style."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, momentum_dtype=None):
+    return {
+        "momentum": jax.tree.map(
+            lambda p: jnp.zeros_like(
+                p, dtype=momentum_dtype or p.dtype
+            ),
+            params,
+        )
+    }
+
+
+def update(grads, state, params, lr, momentum: float = 0.9):
+    """Returns (new_params, new_state). lr may be a traced scalar."""
+    new_m = jax.tree.map(
+        lambda m, g: momentum * m.astype(jnp.float32) + g.astype(jnp.float32),
+        state["momentum"],
+        grads,
+    )
+    new_p = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params,
+        new_m,
+    )
+    new_m = jax.tree.map(
+        lambda m, old: m.astype(old.dtype), new_m, state["momentum"]
+    )
+    return new_p, {"momentum": new_m}

@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled XLA artifacts + analytic cell models."""
+
+from repro.roofline.analysis import (
+    RooflineReport,
+    parse_collectives,
+    parse_collectives_nested,
+    report,
+)

@@ -1,0 +1,3 @@
+"""Runtime: fault tolerance, straggler mitigation, compression."""
+
+from repro.runtime import compression, fault_tolerance, stragglers

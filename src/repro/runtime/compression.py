@@ -1,0 +1,148 @@
+"""Gradient/parameter compression — composable with mixing design (§I).
+
+The paper notes compression, hyperparameter optimization, and adaptive
+communication "are compatible with each other and thus can be combined";
+κ in the communication optimizer is then the *compressed* size
+(footnote 5: use the max compressed size for a guaranteed τ). Provided
+operators, all pytree-level:
+
+  * top-k sparsification (with error feedback accumulator),
+  * random-k sparsification (rescaled, unbiased),
+  * int8 linear quantization (per-tensor scale).
+
+Each returns (compressed_payload, decode_fn, bytes) so the trainer can
+feed real κ values back into the routing/mixing design.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Compressed:
+    payload: Any
+    nbytes: int
+    decode: Callable[[], Any]
+
+
+def _leaf_bytes(x) -> int:
+    return x.size * x.dtype.itemsize
+
+
+def topk_compress(tree: Any, fraction: float = 0.01) -> Compressed:
+    """Keep the largest-|value| fraction per leaf: (indices, values)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = []
+    nbytes = 0
+    for leaf in leaves:
+        flat = leaf.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        payload.append((idx.astype(jnp.int32), vals, leaf.shape, leaf.dtype))
+        nbytes += k * (4 + leaf.dtype.itemsize)
+
+    def decode():
+        out = []
+        for idx, vals, shape, dtype in payload:
+            flat = jnp.zeros(
+                int(jnp.prod(jnp.asarray(shape))), dtype
+            ).at[idx].set(vals)
+            out.append(flat.reshape(shape))
+        return jax.tree.unflatten(treedef, out)
+
+    return Compressed(payload, nbytes, decode)
+
+
+def randk_compress(tree: Any, fraction: float = 0.01, seed: int = 0) -> Compressed:
+    """Unbiased random-k: keep random coordinates, scale by 1/fraction."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = []
+    nbytes = 0
+    for i, leaf in enumerate(leaves):
+        flat = leaf.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        idx = jax.random.choice(
+            jax.random.key((seed, i)[1] * 7919 + seed),
+            flat.size, (k,), replace=False,
+        )
+        vals = flat[idx] / fraction
+        payload.append((idx.astype(jnp.int32), vals, leaf.shape, leaf.dtype))
+        nbytes += k * (4 + leaf.dtype.itemsize)
+
+    def decode():
+        out = []
+        for idx, vals, shape, dtype in payload:
+            flat = jnp.zeros(
+                int(jnp.prod(jnp.asarray(shape))), dtype
+            ).at[idx].set(vals.astype(dtype))
+            out.append(flat.reshape(shape))
+        return jax.tree.unflatten(treedef, out)
+
+    return Compressed(payload, nbytes, decode)
+
+
+def int8_compress(tree: Any) -> Compressed:
+    """Per-tensor symmetric int8 quantization."""
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = []
+    nbytes = 0
+    for leaf in leaves:
+        scale = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-12) / 127.0
+        q = jnp.clip(
+            jnp.round(leaf.astype(jnp.float32) / scale), -127, 127
+        ).astype(jnp.int8)
+        payload.append((q, scale, leaf.dtype))
+        nbytes += leaf.size + 4
+
+    def decode():
+        return jax.tree.unflatten(
+            treedef,
+            [
+                (q.astype(jnp.float32) * scale).astype(dtype)
+                for q, scale, dtype in payload
+            ],
+        )
+
+    return Compressed(payload, nbytes, decode)
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """EF memory for biased compressors (top-k): compress(g + e)."""
+
+    residual: Any = None
+
+    def step(
+        self, grads: Any, compressor: Callable[[Any], Compressed]
+    ) -> Compressed:
+        if self.residual is None:
+            self.residual = jax.tree.map(jnp.zeros_like, grads)
+        corrected = jax.tree.map(lambda g, e: g + e, grads, self.residual)
+        comp = compressor(corrected)
+        decoded = comp.decode()
+        self.residual = jax.tree.map(
+            lambda c, d: c - d, corrected, decoded
+        )
+        return comp
+
+
+def compressed_kappa(example_tree: Any, method: str, **kw) -> int:
+    """Worst-case compressed payload bytes — the κ fed to the designer
+    (paper footnote 5)."""
+    if method == "topk":
+        frac = kw.get("fraction", 0.01)
+        return sum(
+            max(1, int(l.size * frac)) * (4 + l.dtype.itemsize)
+            for l in jax.tree.leaves(example_tree)
+        )
+    if method == "int8":
+        return sum(l.size + 4 for l in jax.tree.leaves(example_tree))
+    if method == "none":
+        return sum(_leaf_bytes(l) for l in jax.tree.leaves(example_tree))
+    raise ValueError(method)

@@ -1,0 +1,161 @@
+"""Fault tolerance: agent failure → mixing-matrix re-design → resume.
+
+In D-PSGD a failed agent is not a lost shard of THE model — every agent
+holds a full replica — so recovery is a *membership + hyperparameter*
+problem, which is exactly what the paper's machinery solves:
+
+  1. detect the failure (missed heartbeats),
+  2. drop the agent from the overlay, re-run FMMD-WP on the surviving
+     overlay (categories restricted to surviving paths),
+  3. re-map the stacked state (checkpoint.restore's elastic agent axis,
+     or in-memory row drop), rebuild the gossip schedule, continue.
+
+The same path handles *scale-up* (new agents join, cloned from a current
+replica) — elastic scaling. ``FaultToleranceController`` simulates the
+control loop; on a real deployment the heartbeat source is the cluster
+manager and re-jit is triggered through the launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.fmmd import fmmd_wp
+from repro.core.gossip import GossipSchedule, build_schedule
+from repro.net.categories import Categories, compute_categories
+from repro.net.topology import OverlayNetwork, build_overlay
+
+
+@dataclasses.dataclass
+class Membership:
+    """Live agent set over an (optionally changing) overlay."""
+
+    overlay: OverlayNetwork
+    alive: tuple[int, ...]  # agent indices into the ORIGINAL overlay
+
+    def surviving_overlay(self) -> OverlayNetwork:
+        nodes = [self.overlay.agents[a] for a in self.alive]
+        return build_overlay(self.overlay.underlay, nodes)
+
+
+def redesign_after_failure(
+    overlay: OverlayNetwork,
+    alive: tuple[int, ...],
+    kappa: float,
+    iterations: int | None = None,
+) -> tuple[np.ndarray, GossipSchedule, Categories]:
+    """Re-run the paper's pipeline on the surviving agents."""
+    m = len(alive)
+    if m == 1:
+        w = np.ones((1, 1))
+        return w, build_schedule(w), None
+    sub = build_overlay(
+        overlay.underlay, [overlay.agents[a] for a in alive]
+    )
+    cats = compute_categories(sub)
+    design = fmmd_wp(m, iterations or max(2 * m, 4), cats, kappa)
+    return design.matrix, build_schedule(design.matrix), cats
+
+
+def shrink_state(state: Any, alive: tuple[int, ...]) -> Any:
+    """Drop failed agents' rows from a stacked-agent state pytree."""
+    import jax
+
+    idx = np.asarray(alive)
+
+    def take(x):
+        return x[idx] if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] > max(idx) else x
+
+    return jax.tree.map(take, state)
+
+
+def grow_state(state: Any, new_m: int, clone_from: int = 0) -> Any:
+    """Add agents cloned from an existing replica (elastic scale-up)."""
+    import jax
+
+    def grow(x):
+        if not hasattr(x, "ndim") or x.ndim < 1:
+            return x
+        old_m = x.shape[0]
+        if new_m <= old_m:
+            return x[:new_m]
+        reps = jax.numpy.repeat(
+            x[clone_from : clone_from + 1], new_m - old_m, axis=0
+        )
+        return jax.numpy.concatenate([x, reps], axis=0)
+
+    return jax.tree.map(grow, state)
+
+
+class HeartbeatMonitor:
+    """Failure detection by missed heartbeats (simulation-friendly)."""
+
+    def __init__(self, agents: tuple[int, ...], timeout: float = 3.0,
+                 now: Callable[[], float] = time.monotonic):
+        self._timeout = timeout
+        self._now = now
+        self._last = {a: now() for a in agents}
+
+    def beat(self, agent: int) -> None:
+        self._last[agent] = self._now()
+
+    def failed(self) -> tuple[int, ...]:
+        t = self._now()
+        return tuple(
+            a for a, last in self._last.items() if t - last > self._timeout
+        )
+
+    def remove(self, agent: int) -> None:
+        self._last.pop(agent, None)
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    step: int
+    failed: tuple[int, ...]
+    survivors: tuple[int, ...]
+    new_rho: float
+    redesign_seconds: float
+
+
+class FaultToleranceController:
+    """Orchestrates detect → redesign → shrink for a stacked trainer."""
+
+    def __init__(self, overlay: OverlayNetwork, kappa: float):
+        self.overlay = overlay
+        self.kappa = kappa
+        self.alive = tuple(range(overlay.num_agents))
+        self.events: list[RecoveryEvent] = []
+
+    def handle_failures(
+        self, failed: tuple[int, ...], state: Any, step: int
+    ) -> tuple[Any, np.ndarray, GossipSchedule]:
+        from repro.core import mixing as mixing_lib
+
+        t0 = time.perf_counter()
+        survivors = tuple(a for a in self.alive if a not in failed)
+        if not survivors:
+            raise RuntimeError("all agents failed")
+        # state rows are indexed by position within current alive set
+        keep_pos = tuple(
+            i for i, a in enumerate(self.alive) if a not in failed
+        )
+        new_state = shrink_state(state, keep_pos)
+        w, schedule, _ = redesign_after_failure(
+            self.overlay, survivors, self.kappa
+        )
+        self.alive = survivors
+        self.events.append(
+            RecoveryEvent(
+                step=step,
+                failed=tuple(failed),
+                survivors=survivors,
+                new_rho=mixing_lib.rho(w) if w.shape[0] > 1 else 0.0,
+                redesign_seconds=time.perf_counter() - t0,
+            )
+        )
+        return new_state, w, schedule

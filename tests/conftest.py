@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 device;
+multi-device coverage lives in test_multidevice.py via subprocesses."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def roofnet_overlay():
+    from repro.net import build_overlay, lowest_degree_nodes, roofnet_like
+
+    u = roofnet_like(seed=0)
+    return build_overlay(u, lowest_degree_nodes(u, 10))
+
+
+@pytest.fixture(scope="session")
+def roofnet_categories(roofnet_overlay):
+    from repro.net import compute_categories
+
+    return compute_categories(roofnet_overlay)

@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+
+from repro.net import (
+    build_overlay,
+    compute_categories,
+    dumbbell_underlay,
+    infer_categories,
+)
+
+
+def test_partition_property(roofnet_overlay, roofnet_categories):
+    """Each traversed directed underlay edge is in exactly one category."""
+    ov, cats = roofnet_overlay, roofnet_categories
+    seen = {}
+    for F, members in cats.members.items():
+        for e in members:
+            assert e not in seen, "edge in two categories"
+            seen[e] = F
+    # every edge on every overlay path is categorized, and its category
+    # contains exactly the overlay links routed over it
+    for i, j in ov.directed_overlay_links:
+        for e in ov.path_edges(i, j):
+            assert e in seen
+            assert (i, j) in seen[e]
+
+
+def test_category_completion_time_matches_linklevel(roofnet_overlay):
+    ov = roofnet_overlay
+    cats = compute_categories(ov)
+    # direct routing of a ring: t_F computed two ways must agree
+    uses = {}
+    m = ov.num_agents
+    for i in range(m):
+        j = (i + 1) % m
+        uses[(i, j)] = uses.get((i, j), 0) + 1
+        uses[(j, i)] = uses.get((j, i), 0) + 1
+    tau_cat = cats.completion_time(uses, kappa=1.0)
+    # link-level: load per directed underlay edge
+    loads = {}
+    for (i, j), n in uses.items():
+        for e in ov.path_edges(i, j):
+            loads[e] = loads.get(e, 0) + n
+    tau_link = max(
+        n / ov.underlay.capacity(*e) for e, n in loads.items()
+    )
+    assert tau_cat == pytest.approx(tau_link, rel=1e-12)
+
+
+def test_inferred_matches_truth(roofnet_overlay):
+    truth = compute_categories(roofnet_overlay)
+    inf = infer_categories(roofnet_overlay, capacity_noise=0.0)
+    assert set(inf.capacity) == set(truth.capacity)
+    for F in truth.capacity:
+        assert inf.capacity[F] == pytest.approx(truth.capacity[F])

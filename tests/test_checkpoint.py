@@ -1,0 +1,65 @@
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+
+
+def _state(m=4):
+    return {
+        "params": {"w": jnp.arange(float(m * 3)).reshape(m, 3)},
+        "opt": {"momentum": {"w": jnp.ones((m, 3))}},
+        "step": jnp.asarray(5),
+    }
+
+
+def test_save_restore_roundtrip():
+    st = _state()
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 5, st)
+        got, step = restore(d, st)
+        assert step == 5
+        np.testing.assert_allclose(got["params"]["w"], st["params"]["w"])
+
+
+def test_retention_keeps_latest_k():
+    st = _state()
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            save(d, s, st, keep=2)
+        names = sorted(os.listdir(d))
+        assert names == ["step_0000000004", "step_0000000005"]
+
+
+def test_elastic_restore_grow_and_shrink():
+    st = _state(m=4)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, st)
+        small = _state(m=2)
+        got, _ = restore(d, small, num_agents=2)
+        assert got["params"]["w"].shape == (2, 3)
+        big = _state(m=7)
+        got, _ = restore(d, big, num_agents=7)
+        assert got["params"]["w"].shape == (7, 3)
+        # grown agents are clones of agent 0
+        np.testing.assert_allclose(got["params"]["w"][4],
+                                   got["params"]["w"][0])
+
+
+def test_async_checkpointer():
+    st = _state()
+    with tempfile.TemporaryDirectory() as d:
+        ac = AsyncCheckpointer(d, keep=2)
+        ac.save(10, st)
+        ac.save(20, st)
+        ac.wait()
+        assert latest_step(d) == 20
+
+
+def test_restore_missing_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            restore(d, _state())

@@ -1,0 +1,72 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.compression import (
+    ErrorFeedback,
+    compressed_kappa,
+    int8_compress,
+    randk_compress,
+    topk_compress,
+)
+
+
+def _tree(seed=0, n=1024):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (n,)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (32, 16))}
+
+
+def test_topk_keeps_largest():
+    t = _tree()
+    c = topk_compress(t, fraction=0.1)
+    d = c.decode()
+    # decoded entries are either 0 or exact originals
+    for key in t:
+        orig, dec = np.asarray(t[key]), np.asarray(d[key])
+        nz = dec != 0
+        np.testing.assert_allclose(dec[nz], orig[nz])
+        # kept fraction ≈ requested
+        assert abs(nz.mean() - 0.1) < 0.05
+        # smallest kept |value| >= largest dropped |value|
+        if nz.any() and (~nz).any():
+            assert np.abs(orig[nz]).min() >= np.abs(orig[~nz]).max() - 1e-6
+
+
+def test_randk_unbiased():
+    t = {"a": jnp.ones((512,))}
+    est = np.zeros(512)
+    reps = 64
+    for s in range(reps):
+        est += np.asarray(randk_compress(t, 0.25, seed=s).decode()["a"])
+    est /= reps
+    assert abs(est.mean() - 1.0) < 0.15
+
+
+def test_int8_roundtrip_error_bounded():
+    t = _tree(2)
+    d = int8_compress(t).decode()
+    for key in t:
+        orig = np.asarray(t[key])
+        err = np.abs(np.asarray(d[key]) - orig).max()
+        assert err <= np.abs(orig).max() / 127.0 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    ef = ErrorFeedback()
+    g = {"a": jnp.asarray([1.0, 0.1, 0.1, 0.1])}
+    c1 = ef.step(g, lambda t: topk_compress(t, 0.25))
+    # residual holds the dropped mass
+    assert float(jnp.sum(jnp.abs(ef.residual["a"]))) == pytest.approx(0.3)
+    # second round: residual + new grads pushes small coords through
+    c2 = ef.step(g, lambda t: topk_compress(t, 0.25))
+    assert c2.nbytes == c1.nbytes
+
+
+def test_compressed_kappa_consistency():
+    t = _tree(3)
+    full = compressed_kappa(t, "none")
+    tk = compressed_kappa(t, "topk", fraction=0.01)
+    q8 = compressed_kappa(t, "int8")
+    assert tk < q8 < full

@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    consensus_distance,
+    make_dpsgd_step,
+    mix_params,
+    replicate_for_agents,
+)
+from repro.core.weight_opt import optimize_weights
+
+
+def _quadratic_setup(m=6):
+    targets = jnp.arange(m, dtype=jnp.float32)[:, None]
+    loss_fn = lambda p, b: jnp.mean((p["x"] - b) ** 2)
+    params = {"x": jnp.zeros((m, 1))}
+    ring = [(min(i, (i + 1) % m), max(i, (i + 1) % m)) for i in range(m)]
+    w = jnp.asarray(
+        optimize_weights(m, ring, steps=200).matrix, jnp.float32
+    )
+    return params, targets, loss_fn, w
+
+
+def test_consensus_contracts_on_quadratic():
+    params, targets, loss_fn, w = _quadratic_setup()
+    step = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    for k in range(1500):
+        params, loss = step(params, targets, w, jnp.asarray(k))
+    x = np.asarray(params["x"]).ravel()
+    # consensus neighborhood of the global optimum (mean target = 2.5)
+    assert abs(x.mean() - 2.5) < 0.2
+    assert float(consensus_distance(params)) < 2.0
+
+
+def test_both_update_rules_converge_similarly():
+    params0, targets, loss_fn, w = _quadratic_setup()
+    outs = []
+    for mix_first in (False, True):
+        params = jax.tree.map(jnp.copy, params0)
+        step = make_dpsgd_step(loss_fn, learning_rate=0.05,
+                               mix_first=mix_first)
+        for k in range(800):
+            params, _ = step(params, targets, w, jnp.asarray(k))
+        outs.append(np.asarray(params["x"]).mean())
+    assert abs(outs[0] - outs[1]) < 0.3
+
+
+def test_mix_params_matches_manual_einsum():
+    params = {"a": jnp.arange(12.0).reshape(4, 3)}
+    w = jnp.asarray(np.random.default_rng(0).random((4, 4)), jnp.float32)
+    out = mix_params(params, w)
+    np.testing.assert_allclose(
+        np.asarray(out["a"]), np.asarray(w) @ np.asarray(params["a"]),
+        rtol=1e-5,
+    )
+
+
+def test_replicate_for_agents():
+    p = {"w": jnp.ones((3, 2))}
+    r = replicate_for_agents(p, 5)
+    assert r["w"].shape == (5, 3, 2)
+    assert float(consensus_distance(r)) == 0.0

@@ -1,0 +1,84 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+from repro.net import build_overlay, lowest_degree_nodes, roofnet_like
+from repro.runtime.fault_tolerance import (
+    FaultToleranceController,
+    HeartbeatMonitor,
+    grow_state,
+    redesign_after_failure,
+    shrink_state,
+)
+from repro.runtime.stragglers import (
+    StragglerSimulator,
+    deadline_from_history,
+    renormalized_mixing,
+)
+
+
+def test_heartbeat_detects_failure():
+    t = [0.0]
+    mon = HeartbeatMonitor((0, 1, 2), timeout=1.0, now=lambda: t[0])
+    t[0] = 0.5
+    mon.beat(0)
+    mon.beat(1)
+    t[0] = 1.2
+    assert mon.failed() == (2,)
+
+
+def test_controller_redesigns_after_failure(roofnet_overlay):
+    ctl = FaultToleranceController(roofnet_overlay, kappa=1e6)
+    state = {"x": jnp.arange(10.0)[:, None]}
+    new_state, w, sched = ctl.handle_failures((3, 7), state, step=10)
+    assert new_state["x"].shape == (8, 1)
+    mixing.validate_mixing(w)
+    assert ctl.alive == (0, 1, 2, 4, 5, 6, 8, 9)
+    # rows kept correspond to the surviving agents
+    np.testing.assert_allclose(
+        np.asarray(new_state["x"]).ravel(), [0, 1, 2, 4, 5, 6, 8, 9]
+    )
+    # second failure round composes
+    new_state, w2, _ = ctl.handle_failures((0,), new_state, step=20)
+    assert new_state["x"].shape == (7, 1)
+    mixing.validate_mixing(w2)
+
+
+def test_grow_state_clones():
+    st = {"x": jnp.arange(6.0).reshape(3, 2)}
+    g = grow_state(st, 5)
+    assert g["x"].shape == (5, 2)
+    np.testing.assert_allclose(g["x"][3], g["x"][0])
+
+
+@given(seed=st.integers(0, 200), m=st.integers(3, 8))
+@settings(max_examples=25, deadline=None)
+def test_renormalized_mixing_stays_valid(seed, m):
+    rng = np.random.default_rng(seed)
+    links = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    alpha = rng.uniform(0.01, 0.3, len(links))
+    w = mixing.matrix_from_weights(m, links, alpha)
+    drop = rng.random((m, m)) < 0.3
+    delivered = ~(drop | drop.T)
+    np.fill_diagonal(delivered, True)
+    we = renormalized_mixing(w, delivered)
+    mixing.validate_mixing(we)
+    # undelivered exchanges are truly skipped
+    for i in range(m):
+        for j in range(m):
+            if i != j and not delivered[i, j]:
+                assert we[i, j] == 0.0
+
+
+def test_deadline_and_straggler_sim():
+    sim = StragglerSimulator(num_agents=6, prob=0.5, severity=4.0, seed=1)
+    w = mixing.matrix_from_weights(6, [(0, 1), (2, 3), (4, 5)],
+                                   [0.3, 0.3, 0.3])
+    t_free, delivered_free = sim.round_time(1.0, w, deadline=None)
+    assert t_free >= 1.0 and delivered_free.all()
+    t_dl, delivered = sim.round_time(1.0, w, deadline=1.5)
+    assert t_dl <= 1.5
+    hist = [1.0, 1.1, 0.9, 4.0]
+    assert deadline_from_history(hist, 0.75, 1.5) < 4.0

@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+
+from repro.core import mixing
+from repro.core.fmmd import _tau_bar, fmmd, fmmd_wp, theorem35_bound
+
+
+def test_activated_links_bounded_by_iterations(roofnet_categories):
+    for t in (4, 8, 16):
+        res = fmmd(10, t)
+        assert len(res.activated_links) <= t
+        mixing.validate_mixing(res.matrix)
+
+
+def test_theorem35_rho_bound(roofnet_categories):
+    """ρ(W^(T)) ≤ (m−3)/m + 16/(T+2) for m>3, T>16m/3−2 (eq. 34)."""
+    m = 10
+    t = 64  # > 16·10/3 − 2 ≈ 51.3
+    res = fmmd(m, t)
+    bound = (m - 3) / m + 16 / (t + 2)
+    assert res.rho <= bound + 1e-9
+
+
+def test_priority_reduces_tau_bar(roofnet_categories):
+    kappa = 1e6
+    plain = fmmd(10, 12)
+    prio = fmmd(10, 12, categories=roofnet_categories, kappa=kappa,
+                priority=True)
+    tb = lambda r: _tau_bar(frozenset(r.activated_links),
+                            roofnet_categories, kappa)
+    assert tb(prio) <= tb(plain) + 1e-9
+
+
+def test_weight_opt_improves_rho(roofnet_categories):
+    plain = fmmd(10, 16)
+    wopt = fmmd(10, 16, weight_opt=True)
+    assert wopt.rho <= plain.rho + 1e-9
+
+
+def test_fmmd_wp_runs_and_returns_valid(roofnet_categories):
+    res = fmmd_wp(10, 12, roofnet_categories, 1e6)
+    mixing.validate_mixing(res.matrix)
+    assert res.variant == "FMMD-WP"
+    assert 0 <= res.rho < 1.0
+
+
+def test_theorem35_bound_requires_regime():
+    with pytest.raises(ValueError):
+        theorem35_bound(m=3, iterations=100, c_min=1.0, kappa=1.0)
+    with pytest.raises(ValueError):
+        theorem35_bound(m=10, iterations=10, c_min=1.0, kappa=1.0)
+    b = theorem35_bound(m=10, iterations=60, c_min=125000.0, kappa=1e6)
+    assert np.isfinite(b) and b > 0

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mixing_combine import mixing_sgd_combine
+
+FLASH_CASES = [
+    # b, h, kv, s, d, window, softcap, dtype
+    (2, 4, 2, 128, 64, None, None, jnp.float32),
+    (1, 8, 4, 256, 64, 64, None, jnp.float32),
+    (2, 4, 4, 128, 128, None, 50.0, jnp.float32),
+    (1, 2, 1, 256, 32, 128, 30.0, jnp.float32),
+    (1, 4, 2, 128, 64, None, None, jnp.bfloat16),
+    (1, 4, 4, 128, 256, 96, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    b, h, kv, s, d, window, cap, dtype = case
+    ks = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d)).astype(dtype)
+    out = flash_attention(q, k, v, window=window, softcap=cap,
+                          block_q=64, block_k=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, window=window, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+DECODE_CASES = [
+    (2, 4, 2, 512, 64, 300, None, jnp.float32),
+    (1, 8, 8, 1024, 128, 1024, None, jnp.float32),
+    (3, 4, 1, 512, 32, 1, None, jnp.float32),
+    (2, 4, 2, 512, 64, 511, 50.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_oracle(case):
+    b, h, kv, s, d, length, cap, dtype = case
+    ks = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, h, 1, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d)).astype(dtype)
+    out = decode_attention(q, k, v, length, softcap=cap, block_k=256,
+                           interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, length, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("n,r,block", [(1 << 16, 3, 16384),
+                                       (1 << 14, 1, 1 << 14),
+                                       (1 << 15, 6, 4096)])
+def test_mixing_combine_matches_oracle(n, r, block):
+    ks = jax.random.split(jax.random.key(n + r), 4)
+    x = jax.random.normal(ks[0], (n,), jnp.float32)
+    recv = jax.random.normal(ks[1], (r, n), jnp.float32)
+    w = jax.random.uniform(ks[2], (r + 1,))
+    mom = jax.random.normal(ks[3], (n,), jnp.float32)
+    out = mixing_sgd_combine(x, recv, w, mom, lr=0.1, block_n=block,
+                             interpret=True)
+    exp = ref.mixing_sgd_combine_ref(x, recv, w, mom, lr=0.1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)

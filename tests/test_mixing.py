@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+
+
+@given(
+    m=st.integers(3, 12),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=30, deadline=None)
+def test_matrix_from_weights_is_valid_mixing(m, seed):
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.5
+    ]
+    alpha = rng.normal(0, 0.3, len(links))
+    w = mixing.matrix_from_weights(m, links, alpha)
+    mixing.validate_mixing(w)  # symmetric, rows sum to one
+    # round trip
+    links2, alpha2 = mixing.weights_from_matrix(w)
+    w2 = mixing.matrix_from_weights(m, links2, alpha2)
+    np.testing.assert_allclose(w, w2, atol=1e-12)
+
+
+def test_rho_of_ideal_matrix_is_zero():
+    assert mixing.rho(mixing.ideal_matrix(7)) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_rho_of_identity_is_one():
+    assert mixing.rho(np.eye(5)) == pytest.approx(1.0)
+
+
+@given(m=st.integers(3, 10), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_lemma_3_4_decomposition(m, seed):
+    """Any mixing matrix = (1−Σα)I + Σ α_ij S^(i,j)."""
+    rng = np.random.default_rng(seed)
+    links = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    alpha = rng.normal(0, 0.2, len(links))
+    w = mixing.matrix_from_weights(m, links, alpha)
+    recon = (1 - alpha.sum()) * np.eye(m)
+    for (i, j), a in zip(links, alpha):
+        recon += a * mixing.swapping_matrix(m, i, j)
+    np.testing.assert_allclose(w, recon, atol=1e-12)
+
+
+def test_rho_gradient_is_unit_rank_one():
+    rng = np.random.default_rng(0)
+    links = [(0, 1), (1, 2), (2, 3)]
+    w = mixing.matrix_from_weights(4, links, [0.3, 0.2, 0.4])
+    g = mixing.rho_gradient(w)
+    assert np.linalg.matrix_rank(g, tol=1e-8) == 1
+    assert np.linalg.norm(g, 2) == pytest.approx(1.0)
+
+
+def test_iterations_to_converge_monotone_in_rho():
+    ks = [mixing.iterations_to_converge(r, 10) for r in (0.1, 0.5, 0.9, 0.99)]
+    assert all(a < b for a, b in zip(ks, ks[1:]))
+    assert mixing.iterations_to_converge(1.0, 10) == np.inf

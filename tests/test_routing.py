@@ -1,0 +1,74 @@
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.net import (
+    MulticastDemand,
+    build_overlay,
+    compute_categories,
+    demands_from_links,
+    dumbbell_underlay,
+    route,
+    route_congestion_aware,
+    route_direct,
+    route_milp,
+    simulate,
+    lemma31_time,
+)
+from repro.net.routing import validate_solution
+from repro.net.topology import Underlay
+
+
+def _fig2_overlay():
+    """Paper Fig. 2: relay through D bypasses the shared bottleneck."""
+    g = nx.Graph()
+    for e in [(0, 4), (4, 5), (5, 3), (1, 4), (5, 2), (1, 3)]:
+        g.add_edge(*e, capacity=125000.0)
+    return build_overlay(Underlay(graph=g), [0, 1, 2, 3])
+
+
+def test_fig2_relay_halves_time():
+    ov = _fig2_overlay()
+    cats = compute_categories(ov)
+    kappa = 1e6
+    demands = demands_from_links([(0, 3), (1, 2)], kappa, 4)
+    direct = route_direct(demands, cats, kappa)
+    best = route(demands, cats, kappa, 4, time_limit=30)
+    assert direct.completion_time == pytest.approx(16.0)
+    assert best.completion_time == pytest.approx(8.0)
+    validate_solution(best, 4)
+    # simulator agrees with the closed form (Lemma III.1 consistency)
+    sim = simulate(best, ov)
+    assert sim.makespan == pytest.approx(best.completion_time, rel=1e-6)
+    assert lemma31_time(best, ov, kappa) == pytest.approx(8.0)
+
+
+def test_route_never_worse_than_direct(roofnet_overlay, roofnet_categories):
+    kappa = 1e6
+    m = roofnet_overlay.num_agents
+    links = [(i, (i + 1) % m) for i in range(m)]
+    links = [(min(a, b), max(a, b)) for a, b in links]
+    demands = demands_from_links(links, kappa, m)
+    direct = route_direct(demands, roofnet_categories, kappa)
+    best = route(demands, roofnet_categories, kappa, m, time_limit=20)
+    assert best.completion_time <= direct.completion_time + 1e-9
+
+
+def test_milp_optimal_on_small(roofnet_categories):
+    """Heuristic upper-bounds the MILP optimum; both span demands."""
+    ov_cats = roofnet_categories
+    kappa = 1e6
+    demands = demands_from_links([(0, 1), (2, 3)], kappa, 10)
+    milp = route_milp(demands, ov_cats, kappa, 10, time_limit=30)
+    heur = route_congestion_aware(demands, ov_cats, kappa, 10)
+    assert milp is not None
+    validate_solution(milp, 10)
+    assert milp.completion_time <= heur.completion_time + 1e-9
+
+
+def test_flow_rate_consistency(roofnet_categories):
+    kappa = 2e6
+    demands = demands_from_links([(0, 1)], kappa, 10)
+    sol = route_direct(demands, roofnet_categories, kappa)
+    rate = sol.flow_rate(roofnet_categories)
+    assert kappa / rate == pytest.approx(sol.completion_time)

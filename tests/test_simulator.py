@@ -1,0 +1,42 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net import (
+    build_overlay,
+    compute_categories,
+    demands_from_links,
+    lemma31_time,
+    random_geometric_underlay,
+    route_direct,
+    simulate,
+)
+
+
+@given(seed=st.integers(0, 30), m=st.integers(3, 6))
+@settings(max_examples=12, deadline=None)
+def test_lemma31_simulated_makespan_equals_closed_form(seed, m):
+    """Lemma III.1: under equal-κ demands, the max-min fair fluid makespan
+    equals max_e κ·t_e/C_e — validated on random topologies/demands."""
+    u = random_geometric_underlay(12, radius=0.5, seed=seed)
+    agents = list(u.graph.nodes)[:m]
+    ov = build_overlay(u, agents)
+    cats = compute_categories(ov)
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j)
+        for i in range(m)
+        for j in range(i + 1, m)
+        if rng.random() < 0.5
+    ]
+    if not links:
+        links = [(0, 1)]
+    kappa = 1e6
+    demands = demands_from_links(links, kappa, m)
+    sol = route_direct(demands, cats, kappa)
+    closed = lemma31_time(sol, ov, kappa)
+    for fairness in ("maxmin", "equal"):
+        sim = simulate(sol, ov, fairness=fairness)
+        assert sim.makespan == pytest.approx(closed, rel=1e-6)
+    # category-level formula (Lemma III.2) agrees with link-level (III.1)
+    assert sol.completion_time == pytest.approx(closed, rel=1e-9)

@@ -1,0 +1,57 @@
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net import (
+    build_overlay,
+    dumbbell_underlay,
+    grid_underlay,
+    lowest_degree_nodes,
+    roofnet_like,
+)
+
+
+def test_roofnet_like_stats():
+    u = roofnet_like(seed=0)
+    assert u.num_nodes == 38
+    assert u.num_links == 219
+    u.validate()
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_roofnet_like_deterministic_and_connected(seed):
+    u1, u2 = roofnet_like(seed=seed), roofnet_like(seed=seed)
+    assert nx.utils.graphs_equal(u1.graph, u2.graph)
+    assert nx.is_connected(u1.graph)
+    assert u1.num_links == 219
+
+
+def test_overlay_paths_symmetric_and_endpointed(roofnet_overlay):
+    ov = roofnet_overlay
+    for i, j in ov.overlay_links:
+        p, q = ov.path(i, j), ov.path(j, i)
+        assert p == tuple(reversed(q))
+        assert p[0] == ov.agents[i] and p[-1] == ov.agents[j]
+
+
+def test_lowest_degree_selection():
+    u = roofnet_like(seed=0)
+    agents = lowest_degree_nodes(u, 10)
+    degs = dict(u.graph.degree)
+    maxdeg = max(degs[a] for a in agents)
+    others = [n for n in u.graph.nodes if n not in agents]
+    assert all(degs[o] >= maxdeg for o in others) or len(others) == 0
+
+
+def test_grid_and_dumbbell():
+    g = grid_underlay(3, 4)
+    assert g.num_nodes == 12
+    d = dumbbell_underlay(2, 2)
+    ov = build_overlay(d, [0, 1, 2, 3])
+    # every left-right path crosses the single bottleneck
+    for i in (0, 1):
+        for j in (2, 3):
+            edges = ov.path_edges(i, j)
+            assert (4, 5) in edges

@@ -1,0 +1,40 @@
+import numpy as np
+import pytest
+
+from repro.core import mixing
+from repro.core.weight_opt import optimize_weights
+
+
+def test_clique_reaches_ideal():
+    m = 8
+    links = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    res = optimize_weights(m, links)
+    assert res.rho == pytest.approx(0.0, abs=1e-6)
+    mixing.validate_mixing(res.matrix)
+
+
+def test_ring_not_worse_than_best_uniform():
+    m = 8
+    ring = [(min(i, (i + 1) % m), max(i, (i + 1) % m)) for i in range(m)]
+    res = optimize_weights(m, ring)
+    best_uniform = min(
+        mixing.rho(mixing.matrix_from_weights(m, ring, [a] * m))
+        for a in np.linspace(0.01, 0.9, 2000)
+    )
+    assert res.rho <= best_uniform + 1e-6
+
+
+def test_support_constraint_honored():
+    m = 6
+    links = [(0, 1), (2, 3), (4, 5)]
+    res = optimize_weights(m, links, steps=200)
+    w = res.matrix
+    for i in range(m):
+        for j in range(i + 1, m):
+            if (i, j) not in links:
+                assert abs(w[i, j]) < 1e-12
+
+
+def test_empty_support_is_identity():
+    res = optimize_weights(5, [])
+    np.testing.assert_allclose(res.matrix, np.eye(5))

@@ -14,6 +14,7 @@ def main() -> None:
         gossip_traffic,
         lemma31_validation,
         roofline_bench,
+        sim_scale,
         table1_runtimes,
     )
 
@@ -24,6 +25,7 @@ def main() -> None:
         "lemma31_validation": lemma31_validation.main,
         "roofline_bench": roofline_bench.main,
         "gossip_traffic": gossip_traffic.main,
+        "sim_scale": sim_scale.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

@@ -1,0 +1,83 @@
+"""Version shims for the jax API surface this repo relies on.
+
+The codebase targets the modern jax API (``jax.make_mesh(axis_types=...)``,
+``jax.set_mesh``, ``jax.shard_map``) but must also run on jax 0.4.x, where
+
+  * ``jax.sharding.AxisType`` does not exist (explicit-sharding mesh axis
+    types landed in 0.5),
+  * ``jax.set_mesh`` does not exist (``Mesh`` itself is the context
+    manager),
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication-check knob ``check_rep`` instead of ``check_vma``.
+
+All call sites go through this module so the rest of the tree stays
+version-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(shape, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            shape,
+            axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(shape, axis_names)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    On jax >= 0.5 this is ``jax.set_mesh``; on 0.4.x a ``Mesh`` is itself
+    a context manager with the same effect for the tracing APIs we use.
+    """
+    if HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+@contextlib.contextmanager
+def maybe_set_mesh(mesh: jax.sharding.Mesh | None):
+    """``set_mesh`` that tolerates ``None`` (no ambient mesh)."""
+    if mesh is None:
+        yield None
+    else:
+        with set_mesh(mesh) as m:
+            yield m
+
+
+def shard_map(
+    f,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+):
+    """``jax.shard_map`` with the replication check disabled.
+
+    Falls back to ``jax.experimental.shard_map.shard_map(check_rep=False)``
+    on jax 0.4.x.
+    """
+    if HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )

@@ -31,6 +31,7 @@ from repro.core.topology_baselines import (
 from repro.net.categories import Categories, compute_categories
 from repro.net.demands import demands_from_links
 from repro.net.routing import RoutingSolution, route, route_direct
+from repro.net.simulator import Scenario, SimResult, simulate
 from repro.net.topology import OverlayNetwork
 
 
@@ -43,6 +44,7 @@ class DesignOutcome:
     rho: float
     iterations_to_eps: float
     total_time: float    # τ · K(ρ) — objective (15)
+    sim: SimResult | None = None  # fluid simulation (scenario pricing)
 
     @property
     def name(self) -> str:
@@ -57,8 +59,23 @@ def evaluate_design(
     constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
     optimize_routing: bool = True,
     milp_time_limit: float = 60.0,
+    overlay: OverlayNetwork | None = None,
+    scenario: Scenario | None = None,
 ) -> DesignOutcome:
-    """Route the design's demands and price its total training time."""
+    """Route the design's demands and price its total training time.
+
+    With ``scenario`` (and the ``overlay`` it needs), the per-iteration
+    time τ is the fluid-simulated makespan under the scenario's degraded
+    network instead of the closed-form static value — so a design can be
+    priced under time-varying capacities, cross-traffic, stragglers, and
+    churn before deployment. Churn-cancelled exchanges are priced as
+    renormalized-mixing rounds (the survivors' completion time; see
+    ``outcome.sim.cancelled_branches`` for how much of W was lost), while
+    a simulation that never completes (``unfinished_branches > 0``)
+    prices as τ = inf rather than silently under-counting.
+    """
+    if scenario is not None and overlay is None:
+        raise ValueError("scenario pricing requires the overlay")
     links = design.activated_links
     demands = demands_from_links(links, kappa, num_agents) if links else []
     if demands:
@@ -74,16 +91,28 @@ def evaluate_design(
             demands=(), trees=(), completion_time=0.0,
             method="empty", solve_seconds=0.0,
         )
+    sim = None
+    tau = sol.completion_time
+    if scenario is not None and demands:
+        sim = simulate(sol, overlay, scenario=scenario)
+        # A truncated run, or one where churn cancelled everything before
+        # a single branch finished, must not price as cheap/free.
+        undelivered = sim.makespan == 0.0 and sim.cancelled_branches > 0
+        tau = (
+            np.inf if sim.unfinished_branches or undelivered
+            else sim.makespan
+        )
     rho_v = design.rho
     k_eps = mixing.iterations_to_converge(rho_v, num_agents, constants)
     return DesignOutcome(
         design=design,
         routing=sol,
-        tau=sol.completion_time,
+        tau=tau,
         tau_bar=_tau_bar(frozenset(links), categories, kappa),
         rho=rho_v,
         iterations_to_eps=k_eps,
-        total_time=sol.completion_time * k_eps,
+        total_time=tau * k_eps,
+        sim=sim,
     )
 
 
@@ -96,11 +125,13 @@ def design(
     iterations: int = 12,
     constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
     optimize_routing: bool = True,
+    scenario: Scenario | None = None,
 ) -> DesignOutcome:
     """Produce and price one named design.
 
     method ∈ {"fmmd", "fmmd-w", "fmmd-p", "fmmd-wp", "clique", "ring",
-              "prim", "sca"}.
+              "prim", "sca"}. ``scenario`` prices the design under a
+    degraded/time-varying network (requires ``overlay``).
     """
     m = num_agents
     method = method.lower()
@@ -126,7 +157,8 @@ def design(
     else:
         raise ValueError(f"unknown design method: {method}")
     return evaluate_design(
-        d, categories, kappa, m, constants, optimize_routing
+        d, categories, kappa, m, constants, optimize_routing,
+        overlay=overlay, scenario=scenario,
     )
 
 

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class GossipSchedule:
@@ -150,12 +152,11 @@ def mix_sparse_shardmap(
         return jax.tree.map(mix_leaf, p)
 
     # in/out specs mirror the jit-level param specs (leaf dim0 on agents).
-    return jax.shard_map(
+    return compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(param_specs,),
         out_specs=param_specs,
-        check_vma=False,
     )(params)
 
 

@@ -13,7 +13,18 @@ from repro.net.routing import (
     route_direct,
     route_milp,
 )
-from repro.net.simulator import SimResult, lemma31_time, simulate
+from repro.net.simulator import (
+    BranchIncidence,
+    CapacityPhase,
+    ChurnEvent,
+    CrossTraffic,
+    Scenario,
+    SimResult,
+    StragglerEvent,
+    compile_incidence,
+    lemma31_time,
+    simulate,
+)
 from repro.net.topology import (
     MBPS,
     PAPER_MODEL_BYTES,

@@ -66,6 +66,24 @@ class RoutingSolution:
             default=math.inf,
         )
 
+    def unicast_branches(
+        self, overlay
+    ) -> tuple[tuple[int, tuple[int, int], tuple[tuple[int, int], ...]], ...]:
+        """Expand every flow tree into activated unicast branches.
+
+        Each directed overlay link (i, j) in flow h's tree is an activated
+        unicast flow carrying h's content over the underlay path p_{i,j}
+        (paper Lemma III.1's definition). Returns
+        ``(flow, (i, j), underlay_edge_path)`` triples; the enumeration
+        order is shared by every simulator engine so their event arithmetic
+        is comparable term by term.
+        """
+        out = []
+        for h, tree in enumerate(self.trees):
+            for (i, j) in tree:
+                out.append((h, (i, j), overlay.path_edges(i, j)))
+        return tuple(out)
+
 
 def _tree_connects(
     tree: frozenset, demand: MulticastDemand, num_agents: int

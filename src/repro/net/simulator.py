@@ -11,6 +11,22 @@ given the underlay capacities; the next completion is advanced to. The
 multicast flow h completes when its slowest unicast branch finishes; a
 branch's traffic occupies every underlay edge of its (possibly relayed)
 overlay path.
+
+Two engines share the same event arithmetic:
+
+  * ``engine="vectorized"`` (default) — precomputes a branch×edge
+    incidence matrix once per routing solution and runs progressive
+    filling as numpy matrix/mask operations; tractable at 100+ agents /
+    1000+ branches, and the only engine that supports ``Scenario``.
+  * ``engine="reference"``  — the original pure-Python dict loops, kept
+    as the ground truth the vectorized engine is property-tested against.
+
+The ``Scenario`` layer models operating conditions beyond the paper's
+static network: piecewise-constant time-varying link capacities,
+background cross-traffic flows, straggling agents (throttled below their
+fair share), and agent churn (departures cancel the affected branches).
+Scenario timeline breakpoints become simulation events, so allocations
+stay piecewise-constant and the fluid model remains exact.
 """
 
 from __future__ import annotations
@@ -21,32 +37,374 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from repro.net.demands import MulticastDemand
 from repro.net.routing import RoutingSolution
 from repro.net.topology import OverlayNetwork
 
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
+    """Simulation outcome.
+
+    ``makespan`` is the completion time of the slowest *finished* branch
+    (churn-cancelled branches are excluded — they represent exchanges the
+    surviving agents renormalize away, not time spent waiting).
+    ``flow_completion[h]`` is NaN when flow h still had unfinished
+    branches at loop exit (``max_events`` truncation) — check
+    ``unfinished_branches`` before trusting a run that may have been cut
+    short.
+    """
+
     makespan: float
     flow_completion: tuple[float, ...]  # per multicast demand
     num_events: int
+    cancelled_branches: int = 0  # churned away before completing
+    unfinished_branches: int = 0  # still active when the loop stopped
 
 
-def _unicast_branches(
-    sol: RoutingSolution, overlay: OverlayNetwork
-) -> list[tuple[int, tuple[tuple[int, int], ...]]]:
-    """Expand each flow's tree into unicast branches over underlay edges.
+# ---------------------------------------------------------------------------
+# Scenario layer — time-varying operating conditions
+# ---------------------------------------------------------------------------
 
-    Each directed overlay link (i, j) in flow h's tree is an activated
-    unicast flow carrying h's content over the underlay path p_{i,j}
-    (paper Lemma III.1's definition).
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPhase:
+    """From ``start`` onward, underlay capacities are ``base × scale``.
+
+    ``scale`` is a global multiplier or a per-edge map keyed by underlay
+    edge (either direction; missing edges keep multiplier 1.0). Phases are
+    piecewise-constant: the latest phase with ``start <= t`` applies.
     """
-    branches = []
-    for h, tree in enumerate(sol.trees):
-        for (i, j) in tree:
-            branches.append((h, overlay.path_edges(i, j)))
-    return branches
+
+    start: float
+    scale: float | Mapping[tuple[int, int], float] = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossTraffic:
+    """Background flow occupying ``rate`` bytes/s on every underlay edge
+    of the shortest path ``src → dst`` during [start, stop)."""
+
+    src: int  # underlay node id
+    dst: int  # underlay node id
+    rate: float  # bytes/s
+    start: float = 0.0
+    stop: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerEvent:
+    """Agent ``agent`` is slowed by ``slowdown``× during [start, stop).
+
+    A straggler's endpoint (CPU/NIC) throttles every branch incident to
+    it to 1/slowdown of its fair share — the freed capacity is *not*
+    redistributed (the bottleneck is the host, not the links)."""
+
+    agent: int  # overlay agent index
+    slowdown: float  # >= 1
+    start: float = 0.0
+    stop: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """Agent ``agent`` leaves at ``time``; branches on overlay links
+    touching it — and all branches of flows it sources — are cancelled."""
+
+    agent: int
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Time-varying operating conditions consumed by ``simulate()``.
+
+    The default instance is the paper's static network. ``floor_frac``
+    bounds effective capacity from below at ``floor_frac × base`` so
+    cross-traffic can congest but never fully dead-lock an edge.
+    """
+
+    capacity_phases: tuple[CapacityPhase, ...] = ()
+    cross_traffic: tuple[CrossTraffic, ...] = ()
+    stragglers: tuple[StragglerEvent, ...] = ()
+    churn: tuple[ChurnEvent, ...] = ()
+    floor_frac: float = 1e-9
+
+    @property
+    def is_trivial(self) -> bool:
+        return not (
+            self.capacity_phases
+            or self.cross_traffic
+            or self.stragglers
+            or self.churn
+        )
+
+    def validate(self) -> None:
+        for ph in self.capacity_phases:
+            if isinstance(ph.scale, Mapping):
+                for edge, f in ph.scale.items():
+                    if f <= 0:
+                        raise ValueError(
+                            f"capacity scale for edge {edge} must be "
+                            "positive"
+                        )
+            elif ph.scale <= 0:
+                raise ValueError("capacity scale must be positive")
+        for ct in self.cross_traffic:
+            if ct.rate < 0 or ct.stop < ct.start:
+                raise ValueError(f"invalid cross-traffic window: {ct}")
+        for ev in self.stragglers:
+            if ev.slowdown < 1.0 or ev.stop < ev.start:
+                raise ValueError(f"invalid straggler event: {ev}")
+        for c in self.churn:
+            if c.time < 0:
+                raise ValueError(f"negative churn time: {c}")
+
+    def breakpoints(self) -> tuple[float, ...]:
+        """Sorted finite times at which conditions change."""
+        ts: set[float] = set()
+        for ph in self.capacity_phases:
+            ts.add(ph.start)
+        for ct in self.cross_traffic:
+            ts.add(ct.start)
+            if math.isfinite(ct.stop):
+                ts.add(ct.stop)
+        for ev in self.stragglers:
+            ts.add(ev.start)
+            if math.isfinite(ev.stop):
+                ts.add(ev.stop)
+        for c in self.churn:
+            ts.add(c.time)
+        return tuple(sorted(t for t in ts if t > 0 and math.isfinite(t)))
+
+
+# ---------------------------------------------------------------------------
+# Incidence compilation — done once per routing solution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BranchIncidence:
+    """Precomputed branch×edge structure for the vectorized engine.
+
+    Only underlay edges crossed by at least one branch are indexed (others
+    can never constrain). ``flat_branch``/``flat_edge`` list every
+    (branch, edge) traversal in branch-major path order — the same order
+    the reference engine's dict loops encounter them, which pins down
+    bottleneck tie-breaking and capacity-subtraction order bit for bit.
+    """
+
+    edges: tuple[tuple[int, int], ...]  # directed underlay edges
+    edge_index: Mapping[tuple[int, int], int]
+    base_capacity: np.ndarray  # [E] float64
+    flows: np.ndarray  # [B] flow id per branch
+    links: np.ndarray  # [B, 2] overlay endpoints (i, j) per branch
+    flat_branch: np.ndarray  # [entries] branch-major, path order
+    flat_edge: np.ndarray  # [entries]
+    branch_ptr: np.ndarray  # [B+1] CSR slices into flat_edge per branch
+    edge_branch: np.ndarray  # [entries] branches sorted by (edge, branch)
+    edge_ptr: np.ndarray  # [E+1] CSC slices into edge_branch per edge
+
+    @property
+    def num_branches(self) -> int:
+        return self.flows.size
+
+    @property
+    def num_edges(self) -> int:
+        return self.base_capacity.size
+
+    def edge_counts(self, active: np.ndarray) -> np.ndarray:
+        """Active-branch crossings per edge (integer-valued float64)."""
+        mask = active[self.flat_branch]
+        return np.bincount(
+            self.flat_edge[mask], minlength=self.num_edges
+        ).astype(np.float64)
+
+
+def compile_incidence(
+    sol: RoutingSolution,
+    overlay: OverlayNetwork,
+    branches: Sequence[tuple] | None = None,
+) -> BranchIncidence:
+    """Build the sparse branch×edge incidence for ``sol`` on ``overlay``.
+
+    ``branches`` (from ``sol.unicast_branches``) may be supplied to avoid
+    re-expanding the trees when the caller already holds them.
+    """
+    if branches is None:
+        branches = sol.unicast_branches(overlay)
+    edge_index: dict[tuple[int, int], int] = {}
+    flat_branch: list[int] = []
+    flat_edge: list[int] = []
+    flows = np.empty(len(branches), dtype=np.int64)
+    links = np.empty((len(branches), 2), dtype=np.int64)
+    for b, (h, (i, j), path) in enumerate(branches):
+        flows[b] = h
+        links[b] = (i, j)
+        for e in path:
+            idx = edge_index.setdefault(e, len(edge_index))
+            flat_branch.append(b)
+            flat_edge.append(idx)
+    edges = tuple(edge_index)
+    caps = np.array(
+        [overlay.underlay.capacity(*e) for e in edges], dtype=np.float64
+    )
+    fb = np.asarray(flat_branch, dtype=np.int64)
+    fe = np.asarray(flat_edge, dtype=np.int64)
+    order = np.argsort(fe, kind="stable")  # (edge, branch) lexicographic
+    return BranchIncidence(
+        edges=edges,
+        edge_index=edge_index,
+        base_capacity=caps,
+        flows=flows,
+        links=links,
+        flat_branch=fb,
+        flat_edge=fe,
+        branch_ptr=np.searchsorted(fb, np.arange(len(branches) + 1)),
+        edge_branch=fb[order],
+        edge_ptr=np.searchsorted(fe[order], np.arange(len(edges) + 1)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized rate allocation
+# ---------------------------------------------------------------------------
+
+
+def _first_encounter_tie_break(
+    tied: np.ndarray, unfrozen: np.ndarray, inc: BranchIncidence
+) -> int:
+    """Among ``tied`` edges, the one an unfrozen branch traverses first
+    in branch-major path order (cheap CSC walk for small tie sets)."""
+    best_edge = -1
+    best_branch = -1
+    for e in tied:
+        crossers = inc.edge_branch[inc.edge_ptr[e] : inc.edge_ptr[e + 1]]
+        live = crossers[unfrozen[crossers]]
+        if not live.size:
+            continue
+        b = int(live[0])  # ascending branch order
+        if best_branch < 0 or b < best_branch:
+            best_branch, best_edge = b, int(e)
+        elif b == best_branch:
+            # Same first branch: earlier position within its path wins.
+            path = inc.flat_edge[
+                inc.branch_ptr[b] : inc.branch_ptr[b + 1]
+            ]
+            for pe in path:
+                if pe == e:
+                    best_edge = int(e)
+                    break
+                if pe == best_edge:
+                    break
+    return best_edge
+
+
+def _branch_entries(inc: BranchIncidence, idx: np.ndarray) -> np.ndarray:
+    """Edge indices traversed by branches ``idx`` (ascending), in
+    branch-major path order — a multi-slice gather without a Python loop."""
+    fe, bptr = inc.flat_edge, inc.branch_ptr
+    if idx.size == 1:
+        b = int(idx[0])
+        return fe[bptr[b] : bptr[b + 1]]
+    starts = bptr[idx]
+    lens = bptr[idx + 1] - starts
+    cum = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    flat_pos = np.arange(int(lens.sum())) + np.repeat(starts - cum, lens)
+    return fe[flat_pos]
+
+
+def _maxmin_rates_vec(
+    active: np.ndarray,
+    inc: BranchIncidence,
+    caps: np.ndarray,
+    counts: np.ndarray | None = None,
+) -> np.ndarray:
+    """Progressive-filling max-min fair rates, as matrix/mask operations.
+
+    Bitwise-identical to ``_maxmin_rates``: the bottleneck each round is
+    the first minimum-share edge in branch-major traversal order (the
+    reference's dict insertion order), and capacity is drained with
+    ``np.subtract.at`` — an unbuffered sequential subtraction matching
+    the reference's per-branch loop.
+
+    ``counts`` (active-branch crossings per edge, integer-valued floats)
+    may be supplied by a caller that maintains it incrementally; it is
+    not mutated.
+    """
+    n = inc.num_branches
+    rates = np.zeros(n)
+    unfrozen = active.copy()
+    n_unfrozen = int(active.sum())
+    cap_left = caps.astype(np.float64, copy=True)
+    # Integer-valued float counts, then incremental decrements as
+    # branches freeze (each loop turn touches only the entries of newly
+    # frozen branches, not the whole structure).
+    if counts is None:
+        counts = inc.edge_counts(unfrozen)
+    else:
+        counts = counts.copy()
+    share = np.empty(inc.num_edges)
+    valid = np.empty(inc.num_edges, dtype=bool)
+    fe = inc.flat_edge
+    while n_unfrozen:
+        np.greater(counts, 0, out=valid)
+        share.fill(np.inf)
+        np.divide(cap_left, counts, out=share, where=valid)
+        e_star = int(np.argmin(share))
+        smin = share[e_star]
+        if not np.isfinite(smin):
+            break  # no edge carries an unfrozen branch
+        ties = share == smin  # invalid edges hold inf, never tie
+        n_ties = int(np.count_nonzero(ties))
+        if n_ties > 1:
+            # Tie-break: the first (branch-major, path-order) traversal
+            # of any tied edge by an unfrozen branch — the reference's
+            # dict-insertion first-encounter order.
+            if n_ties <= 8:
+                e_star = _first_encounter_tie_break(
+                    np.flatnonzero(ties), unfrozen, inc
+                )
+            else:
+                sel = unfrozen[inc.flat_branch] & ties[fe]
+                e_star = int(fe[int(np.argmax(sel))])
+        crossers = inc.edge_branch[
+            inc.edge_ptr[e_star] : inc.edge_ptr[e_star + 1]
+        ]
+        idx = crossers[unfrozen[crossers]]  # ascending branch order
+        rates[idx] = smin
+        unfrozen[idx] = False
+        n_unfrozen -= idx.size
+        touched = _branch_entries(inc, idx)
+        # Unbuffered sequential subtraction — bitwise-matches the
+        # reference's per-branch capacity drain.
+        np.subtract.at(cap_left, touched, smin)
+        np.subtract.at(counts, touched, 1.0)
+    return rates
+
+
+def _equal_share_rates_vec(
+    active: np.ndarray,
+    inc: BranchIncidence,
+    caps: np.ndarray,
+    counts: np.ndarray | None = None,
+) -> np.ndarray:
+    """Static equal sharing: every edge splits capacity evenly among its
+    crossing branches; a branch gets its min share along the path
+    (the allocation of Lemma III.1's achievability argument)."""
+    if counts is None:
+        counts = inc.edge_counts(active)
+    rates = np.full(inc.num_branches, np.inf)
+    mask = active[inc.flat_branch]
+    fb = inc.flat_branch[mask]
+    fe = inc.flat_edge[mask]
+    np.minimum.at(rates, fb, caps[fe] / counts[fe])
+    rates[~active] = 0.0
+    return rates
+
+
+# ---------------------------------------------------------------------------
+# Reference rate allocation (the original dict-loop implementation)
+# ---------------------------------------------------------------------------
 
 
 def _maxmin_rates(
@@ -92,9 +450,7 @@ def _equal_share_rates(
     branch_edges: Sequence[tuple[tuple[int, int], ...]],
     capacity: Mapping[tuple[int, int], float],
 ) -> np.ndarray:
-    """Static equal sharing: every edge splits capacity evenly among its
-    crossing branches; a branch gets its min share along the path
-    (the allocation of Lemma III.1's achievability argument)."""
+    """Static equal sharing (reference implementation)."""
     counts: dict[tuple[int, int], int] = {}
     for a in active:
         for e in branch_edges[a]:
@@ -105,31 +461,27 @@ def _equal_share_rates(
     return rates
 
 
-def simulate(
+# ---------------------------------------------------------------------------
+# Event loops
+# ---------------------------------------------------------------------------
+
+
+def _simulate_reference(
     sol: RoutingSolution,
     overlay: OverlayNetwork,
-    fairness: str = "maxmin",
-    max_events: int = 100_000,
+    branches: Sequence[tuple[int, tuple[int, int], tuple]],
+    fairness: str,
+    max_events: int,
 ) -> SimResult:
-    """Simulate completion of all multicast demands under ``sol``.
-
-    fairness: "maxmin" (TCP-like, dynamic reallocation on completions) or
-    "equal" (static equal split, re-evaluated on completions).
-    """
-    branches = _unicast_branches(sol, overlay)
-    if not branches:
-        return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
-
-    # Directed underlay edge capacities (each direction independent).
-    capacity: dict[tuple[int, int], float] = {}
-    for u, v, data in overlay.underlay.graph.edges(data=True):
-        capacity[(u, v)] = float(data["capacity"])
-        capacity[(v, u)] = float(data["capacity"])
-
+    capacity = overlay.underlay.directed_capacities()
     n = len(branches)
-    remaining = np.array([sol.demands[h].size for h, _ in branches])
+    # float64 explicitly: integer demand sizes would otherwise make
+    # `remaining[active] -= rates * dt` silently truncate.
+    remaining = np.array(
+        [sol.demands[h].size for h, _, _ in branches], dtype=np.float64
+    )
     done_time = np.full(n, np.nan)
-    branch_edges = [edges for _, edges in branches]
+    branch_edges = [edges for _, _, edges in branches]
     t = 0.0
     events = 0
     alloc = _maxmin_rates if fairness == "maxmin" else _equal_share_rates
@@ -151,14 +503,242 @@ def simulate(
         active = still
         events += 1
 
+    return _collect_result(
+        sol, np.asarray([h for h, _, _ in branches]), done_time,
+        cancelled=np.zeros(n, dtype=bool), events=events,
+        unfinished=len(active),
+    )
+
+
+def _phase_capacity_array(
+    inc: BranchIncidence, phase: CapacityPhase
+) -> np.ndarray:
+    """Effective capacities under one phase (precomputed per phase)."""
+    if isinstance(phase.scale, Mapping):
+        factors = np.ones(inc.num_edges)
+        for idx, (u, v) in enumerate(inc.edges):
+            f = phase.scale.get((u, v), phase.scale.get((v, u), 1.0))
+            factors[idx] = float(f)
+        return inc.base_capacity * factors
+    return inc.base_capacity * float(phase.scale)
+
+
+def _simulate_vectorized(
+    sol: RoutingSolution,
+    overlay: OverlayNetwork,
+    inc: BranchIncidence,
+    fairness: str,
+    max_events: int,
+    scenario: Scenario | None,
+) -> SimResult:
+    n = inc.num_branches
+    # float64 explicitly (see _simulate_reference).
+    sizes = np.array(
+        [sol.demands[h].size for h in inc.flows], dtype=np.float64
+    )
+    remaining = sizes.copy()
+    thresh = 1e-9 * sizes
+    done_time = np.full(n, np.nan)
+    active = np.ones(n, dtype=bool)
+    cancelled = np.zeros(n, dtype=bool)
+    alloc = _maxmin_rates_vec if fairness == "maxmin" else _equal_share_rates_vec
+
+    if scenario is not None:
+        scenario.validate()
+        m = overlay.num_agents
+        for ev in (*scenario.stragglers, *scenario.churn):
+            if not 0 <= ev.agent < m:
+                raise ValueError(
+                    f"scenario references agent {ev.agent}, but the "
+                    f"overlay has {m} agents"
+                )
+        phases = tuple(
+            sorted(scenario.capacity_phases, key=lambda p: p.start)
+        )
+        # One effective-capacity array per phase, built once up front
+        # (a per-edge Mapping scale would otherwise cost an O(E) Python
+        # loop on every event).
+        phase_caps = [_phase_capacity_array(inc, ph) for ph in phases]
+        churn = sorted(scenario.churn, key=lambda c: c.time)
+        breakpoints = scenario.breakpoints()
+        flow_source = np.array(
+            [d.source for d in sol.demands], dtype=np.int64
+        )
+        # Cross-traffic paths resolved to indexed edges once.
+        cross: list[tuple[CrossTraffic, np.ndarray]] = []
+        for ct in scenario.cross_traffic:
+            path = overlay.underlay.shortest_path(ct.src, ct.dst)
+            idxs = [
+                inc.edge_index[e]
+                for k in range(len(path) - 1)
+                if (e := (path[k], path[k + 1])) in inc.edge_index
+            ]
+            cross.append((ct, np.asarray(idxs, dtype=np.int64)))
+    else:
+        phases, phase_caps, churn, breakpoints, cross = (), [], [], (), []
+
+    t = 0.0
+    events = 0
+    churn_ptr = 0
+    bp_ptr = 0
+    phase_ptr = 0
+    cur_phase = -1  # latest phase with start <= t (t is monotone)
+    # Active-branch crossings per edge, maintained incrementally as
+    # branches finish or churn away (one bincount for the whole run).
+    counts = inc.edge_counts(active)
+
+    def drop_counts(gone: np.ndarray) -> None:
+        idx = np.flatnonzero(gone)
+        if idx.size:
+            np.subtract.at(counts, _branch_entries(inc, idx), 1.0)
+
+    while active.any() and events < max_events:
+        # Apply departures due by now: cancel branches on overlay links
+        # touching the agent and all branches of flows it sources.
+        while churn_ptr < len(churn) and churn[churn_ptr].time <= t:
+            agent = churn[churn_ptr].agent
+            hit = active & (
+                (inc.links[:, 0] == agent)
+                | (inc.links[:, 1] == agent)
+                | (flow_source[inc.flows] == agent)
+            )
+            cancelled |= hit
+            active &= ~hit
+            drop_counts(hit)
+            churn_ptr += 1
+        if not active.any():
+            break
+
+        if scenario is None:
+            caps = inc.base_capacity
+        else:
+            while phase_ptr < len(phases) and phases[phase_ptr].start <= t:
+                cur_phase = phase_ptr
+                phase_ptr += 1
+            caps = (
+                phase_caps[cur_phase] if cur_phase >= 0
+                else inc.base_capacity
+            )
+            if cross:
+                caps = caps.copy()
+                for ct, idxs in cross:
+                    if ct.start <= t < ct.stop and idxs.size:
+                        caps[idxs] -= ct.rate
+                np.maximum(
+                    caps, scenario.floor_frac * inc.base_capacity, out=caps
+                )
+
+        rates = alloc(active, inc, caps, counts)
+        if scenario is not None and scenario.stragglers:
+            factor = np.ones(n)
+            for ev in scenario.stragglers:
+                if ev.start <= t < ev.stop:
+                    hit = (inc.links[:, 0] == ev.agent) | (
+                        inc.links[:, 1] == ev.agent
+                    )
+                    np.maximum(factor, np.where(hit, ev.slowdown, 1.0),
+                               out=factor)
+            rates = rates / factor
+
+        while bp_ptr < len(breakpoints) and breakpoints[bp_ptr] <= t:
+            bp_ptr += 1
+        t_next = breakpoints[bp_ptr] if bp_ptr < len(breakpoints) else math.inf
+
+        if not np.any(rates > 0):
+            if math.isinf(t_next):
+                raise RuntimeError(
+                    "starved branches; invalid routing/capacities"
+                )
+            t = t_next  # conditions may recover at the next breakpoint
+            events += 1
+            continue
+
+        dt = np.min(remaining[active] / np.maximum(rates[active], 1e-300))
+        if t_next - t < dt:
+            dt = t_next - t
+            t = t_next  # land exactly on the breakpoint (no fp drift)
+        else:
+            t += dt
+        remaining[active] -= rates[active] * dt
+        finished = active & (remaining <= thresh)
+        done_time[finished] = t
+        active &= ~finished
+        drop_counts(finished)
+        events += 1
+
+    return _collect_result(
+        sol, inc.flows, done_time, cancelled, events,
+        unfinished=int(active.sum()),
+    )
+
+
+def _collect_result(
+    sol: RoutingSolution,
+    flows: np.ndarray,
+    done_time: np.ndarray,
+    cancelled: np.ndarray,
+    events: int,
+    unfinished: int,
+) -> SimResult:
+    counted = done_time[~cancelled]
+    finished_any = bool(np.any(~np.isnan(counted))) if counted.size else False
     flow_completion = []
     for h in range(len(sol.demands)):
-        ts = [done_time[a] for a in range(n) if branches[a][0] == h]
-        flow_completion.append(max(ts) if ts else 0.0)
+        sel = (flows == h) & ~cancelled
+        vals = done_time[sel]
+        flow_completion.append(float(np.max(vals)) if vals.size else 0.0)
     return SimResult(
-        makespan=float(np.nanmax(done_time)),
-        flow_completion=tuple(float(x) for x in flow_completion),
+        makespan=float(np.nanmax(counted)) if finished_any else 0.0,
+        flow_completion=tuple(flow_completion),
         num_events=events,
+        cancelled_branches=int(cancelled.sum()),
+        unfinished_branches=unfinished,
+    )
+
+
+def simulate(
+    sol: RoutingSolution,
+    overlay: OverlayNetwork,
+    fairness: str = "maxmin",
+    max_events: int = 100_000,
+    scenario: Scenario | None = None,
+    engine: str = "vectorized",
+) -> SimResult:
+    """Simulate completion of all multicast demands under ``sol``.
+
+    fairness: "maxmin" (TCP-like, dynamic reallocation on completions) or
+    "equal" (static equal split, re-evaluated on completions).
+    scenario: optional time-varying conditions (vectorized engine only).
+    engine: "vectorized" (incidence-matrix numpy core) or "reference"
+    (original dict loops, scenario-free ground truth).
+    """
+    if fairness not in ("maxmin", "equal"):
+        raise ValueError(f"unknown fairness {fairness!r}")
+    if engine not in ("vectorized", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
+    for h, (demand, tree) in enumerate(zip(sol.demands, sol.trees)):
+        if not tree:
+            raise ValueError(
+                f"demand {h} (source {demand.source}) has an empty routing "
+                "tree; route it before simulating"
+            )
+    branches = sol.unicast_branches(overlay)
+    if not branches:
+        return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
+    if scenario is not None and scenario.is_trivial:
+        scenario = None
+    if engine == "reference":
+        if scenario is not None:
+            raise ValueError(
+                "scenarios require the vectorized engine "
+                "(engine='vectorized')"
+            )
+        return _simulate_reference(
+            sol, overlay, branches, fairness, max_events
+        )
+    inc = compile_incidence(sol, overlay, branches)
+    return _simulate_vectorized(
+        sol, overlay, inc, fairness, max_events, scenario
     )
 
 

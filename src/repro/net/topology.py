@@ -53,6 +53,34 @@ class Underlay:
         """Hop-count shortest path (paper assumes hop-count routing)."""
         return tuple(nx.shortest_path(self.graph, src, dst))
 
+    def directed_capacities(self) -> dict[tuple[int, int], float]:
+        """Capacity per *directed* underlay edge (each direction full)."""
+        caps: dict[tuple[int, int], float] = {}
+        for u, v, data in self.graph.edges(data=True):
+            caps[(u, v)] = float(data["capacity"])
+            caps[(v, u)] = float(data["capacity"])
+        return caps
+
+    def with_scaled_capacities(
+        self, scale: float | Mapping[tuple[int, int], float]
+    ) -> "Underlay":
+        """New underlay with capacities multiplied by ``scale``.
+
+        ``scale`` is a global factor or a per-undirected-edge map (either
+        key order accepted; missing edges keep factor 1.0). Used to build
+        statically degraded networks for scenario pricing.
+        """
+        g = self.graph.copy()
+        for u, v, data in g.edges(data=True):
+            if isinstance(scale, Mapping):
+                f = scale.get((u, v), scale.get((v, u), 1.0))
+            else:
+                f = scale
+            data["capacity"] = float(data["capacity"]) * float(f)
+        out = Underlay(graph=g)
+        out.validate()
+        return out
+
     def validate(self) -> None:
         if not nx.is_connected(self.graph):
             raise ValueError("underlay must be connected")

@@ -20,13 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 import numpy as np
 
 from repro.core.fmmd import fmmd_wp
 from repro.core.gossip import GossipSchedule, build_schedule
 from repro.net.categories import Categories, compute_categories
+from repro.net.simulator import ChurnEvent, Scenario, StragglerEvent
 from repro.net.topology import OverlayNetwork, build_overlay
 
 
@@ -59,6 +60,45 @@ def redesign_after_failure(
     cats = compute_categories(sub)
     design = fmmd_wp(m, iterations or max(2 * m, 4), cats, kappa)
     return design.matrix, build_schedule(design.matrix), cats
+
+
+def churn_events_from_failures(
+    failures: Mapping[int, float]
+) -> tuple[ChurnEvent, ...]:
+    """Agent → failure-time map as fluid-simulator churn events."""
+    return tuple(
+        ChurnEvent(agent=a, time=t)
+        for a, t in sorted(failures.items(), key=lambda kv: kv[1])
+    )
+
+
+def failure_scenario(
+    failures: Mapping[int, float] | None = None,
+    pre_failure_slowdown: float = 1.0,
+    slowdown_window: float = 0.0,
+) -> Scenario:
+    """Scenario for pricing a round that loses agents mid-flight.
+
+    Optionally models the common failure signature where an agent limps
+    (``pre_failure_slowdown``× for ``slowdown_window`` seconds) before it
+    drops out — the pattern ``HeartbeatMonitor`` reacts to.
+    """
+    failures = dict(failures or {})
+    stragglers = []
+    if pre_failure_slowdown > 1.0 and slowdown_window > 0.0:
+        for agent, t in failures.items():
+            stragglers.append(
+                StragglerEvent(
+                    agent=agent,
+                    slowdown=pre_failure_slowdown,
+                    start=max(0.0, t - slowdown_window),
+                    stop=t,
+                )
+            )
+    return Scenario(
+        stragglers=tuple(stragglers),
+        churn=churn_events_from_failures(failures),
+    )
 
 
 def shrink_state(state: Any, alive: tuple[int, ...]) -> Any:

@@ -70,6 +70,37 @@ class StragglerSimulator:
         s[mask] = self.severity
         return s
 
+    def scenario_events(
+        self, horizon: float, round_time: float
+    ) -> tuple:
+        """Sample per-round slowdowns as fluid-simulator events.
+
+        Each simulated gossip round [r·round_time, (r+1)·round_time)
+        contributes one ``StragglerEvent`` per straggling agent, so the
+        same stochastic model that drives ``round_time`` can degrade the
+        network simulator (``repro.net.simulate(scenario=...)``).
+        """
+        from repro.net.simulator import StragglerEvent
+
+        if round_time <= 0:
+            raise ValueError("round_time must be positive")
+        if not np.isfinite(horizon):
+            raise ValueError("horizon must be finite")
+        events = []
+        r = 0
+        while r * round_time < horizon:
+            start = r * round_time
+            stop = min(start + round_time, horizon)
+            for agent in np.flatnonzero(self.round_slowdowns() > 1.0):
+                events.append(
+                    StragglerEvent(
+                        agent=int(agent), slowdown=self.severity,
+                        start=start, stop=stop,
+                    )
+                )
+            r += 1
+        return tuple(events)
+
     def round_time(
         self, base_time: float, w: np.ndarray, deadline: float | None = None
     ) -> tuple[float, np.ndarray]:

@@ -1,0 +1,94 @@
+"""Property-test front end: real ``hypothesis`` when installed (the
+``test`` extra in pyproject.toml pins it), else a deterministic
+mini-fallback so the suite still *runs* the property tests instead of
+erroring at collection.
+
+The fallback implements only what this repo's tests draw —
+``st.integers``, ``st.sampled_from``, ``st.booleans``, ``st.floats`` —
+with a per-test seeded RNG; unsupported strategies skip the test rather
+than fail it (``pytest.skip``), mirroring ``pytest.importorskip``'s
+graceful degradation at the granularity of a single test.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        def __getattr__(self, name):  # unsupported strategy → skip test
+            def _skip(*args, **kwargs):
+                return _Strategy(
+                    lambda rng: pytest.skip(
+                        f"hypothesis not installed and fallback lacks "
+                        f"strategy {name!r}"
+                    )
+                )
+
+            return _skip
+
+    st = _FallbackStrategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: pytest must see a parameterless
+            # signature, not the strategy args (it would hunt fixtures).
+            def wrapper():
+                n = getattr(
+                    wrapper, "_fallback_max_examples",
+                    getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES),
+                )
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

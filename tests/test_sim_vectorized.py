@@ -1,0 +1,304 @@
+"""Vectorized simulator: parity with the reference engine, scenario
+semantics, and the gossip traffic bound."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import mixing
+from repro.core.gossip import build_schedule, gossip_collective_bytes
+from repro.core.topology_baselines import clique_design
+from repro.net import (
+    CapacityPhase,
+    ChurnEvent,
+    CrossTraffic,
+    MulticastDemand,
+    Scenario,
+    StragglerEvent,
+    build_overlay,
+    compile_incidence,
+    compute_categories,
+    demands_from_links,
+    line_underlay,
+    random_geometric_underlay,
+    route_congestion_aware,
+    route_direct,
+    simulate,
+)
+from repro.net.routing import RoutingSolution
+from repro.net.simulator import _maxmin_rates, _maxmin_rates_vec
+
+
+def _random_instance(seed: int, m: int, relay: bool = False):
+    u = random_geometric_underlay(12, radius=0.5, seed=seed)
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.6
+    ] or [(0, 1)]
+    demands = demands_from_links(links, 1e6, m)
+    if relay:
+        sol = route_congestion_aware(demands, cats, 1e6, m, rounds=2)
+    else:
+        sol = route_direct(demands, cats, 1e6)
+    return sol, ov
+
+
+@given(seed=st.integers(0, 60), m=st.integers(3, 7))
+@settings(max_examples=15, deadline=None)
+def test_vectorized_engine_matches_reference(seed, m):
+    """Property: both engines agree bitwise on random direct routings,
+    for both fairness models."""
+    sol, ov = _random_instance(seed, m)
+    for fairness in ("maxmin", "equal"):
+        ref = simulate(sol, ov, fairness=fairness, engine="reference")
+        vec = simulate(sol, ov, fairness=fairness, engine="vectorized")
+        assert vec.makespan == ref.makespan
+        assert vec.flow_completion == ref.flow_completion
+        assert vec.num_events == ref.num_events
+
+
+@given(seed=st.integers(0, 40), m=st.integers(3, 6))
+@settings(max_examples=8, deadline=None)
+def test_vectorized_engine_matches_reference_relayed(seed, m):
+    """Same parity on relayed (congestion-aware) routings, whose branches
+    traverse longer multi-overlay-hop underlay paths."""
+    sol, ov = _random_instance(seed, m, relay=True)
+    ref = simulate(sol, ov, engine="reference")
+    vec = simulate(sol, ov, engine="vectorized")
+    assert vec.makespan == ref.makespan
+    assert vec.flow_completion == ref.flow_completion
+
+
+@given(seed=st.integers(0, 50), m=st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_maxmin_rate_vectors_match(seed, m):
+    """The allocators themselves agree rate-by-rate on the full set."""
+    sol, ov = _random_instance(seed, m)
+    inc = compile_incidence(sol, ov)
+    branches = sol.unicast_branches(ov)
+    capacity = ov.underlay.directed_capacities()
+    ref = _maxmin_rates(
+        list(range(len(branches))),
+        [edges for _, _, edges in branches],
+        capacity,
+    )
+    vec = _maxmin_rates_vec(
+        np.ones(len(branches), dtype=bool), inc, inc.base_capacity
+    )
+    assert np.array_equal(ref, vec)
+
+
+@given(m=st.integers(3, 9), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_gossip_bytes_bounded_by_clique(m, seed):
+    """gossip_collective_bytes(schedule, κ) ≤ m(m−1)κ, with equality
+    exactly for the clique design."""
+    kappa = 1e6
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.5
+    ]
+    alpha = rng.uniform(0.05, 0.4, len(links))
+    w = mixing.matrix_from_weights(m, links, alpha)
+    sched = build_schedule(w)
+    got = gossip_collective_bytes(sched, kappa)
+    bound = m * (m - 1) * kappa
+    assert got <= bound + 1e-6
+    if len(links) < m * (m - 1) // 2:
+        assert got < bound
+    clique = build_schedule(clique_design(m).matrix)
+    assert gossip_collective_bytes(clique, kappa) == pytest.approx(bound)
+
+
+# ---------------------------------------------------------------------------
+# Scenario semantics (deterministic 2-agent line: one link, capacity C)
+# ---------------------------------------------------------------------------
+
+
+def _line_instance(kappa=1e6, capacity=125_000.0):
+    u = line_underlay(2, capacity=capacity)
+    ov = build_overlay(u, [0, 1])
+    cats = compute_categories(ov)
+    demands = demands_from_links([(0, 1)], kappa, 2)
+    return route_direct(demands, cats, kappa), ov
+
+
+def test_capacity_phase_exact():
+    # κ=1e6, C=125k → τ=8s static. Halving C at t=4 doubles the rest:
+    # 4s at full rate ships half, the other half at C/2 takes 8s → 12s.
+    sol, ov = _line_instance()
+    sc = Scenario(capacity_phases=(CapacityPhase(start=4.0, scale=0.5),))
+    r = simulate(sol, ov, scenario=sc)
+    assert r.makespan == pytest.approx(12.0)
+
+
+def test_capacity_phase_recovery():
+    sol, ov = _line_instance()
+    sc = Scenario(
+        capacity_phases=(
+            CapacityPhase(start=2.0, scale=0.5),
+            CapacityPhase(start=6.0, scale=1.0),
+        )
+    )
+    # 2s full (2/8 done), 4s half (2/8 more), rest (4/8) full → 4s more.
+    r = simulate(sol, ov, scenario=sc)
+    assert r.makespan == pytest.approx(10.0)
+
+
+def test_cross_traffic_exact():
+    # Background flow eats 20% of the link for the whole transfer:
+    # τ = κ / (0.8 C) = 10s.
+    sol, ov = _line_instance()
+    sc = Scenario(
+        cross_traffic=(CrossTraffic(src=0, dst=1, rate=0.2 * 125_000.0),)
+    )
+    r = simulate(sol, ov, scenario=sc)
+    assert r.makespan == pytest.approx(10.0)
+
+
+def test_straggler_throttles_rate():
+    sol, ov = _line_instance()
+    sc = Scenario(stragglers=(StragglerEvent(agent=0, slowdown=4.0),))
+    r = simulate(sol, ov, scenario=sc)
+    assert r.makespan == pytest.approx(32.0)  # 4× the 8s static time
+
+
+def test_churn_cancels_branches():
+    # Both agents multicast over the single link; agent 1 leaving kills
+    # both directions (its own flow and the branch targeting it).
+    sol, ov = _line_instance()
+    sc = Scenario(churn=(ChurnEvent(agent=1, time=1.0),))
+    r = simulate(sol, ov, scenario=sc)
+    assert r.cancelled_branches == 2
+    assert r.makespan == 0.0  # nothing completed
+
+    # 3-agent line: the far agent leaving spares the 0↔1 exchange.
+    u = line_underlay(3)
+    ov3 = build_overlay(u, [0, 1, 2])
+    cats = compute_categories(ov3)
+    sol3 = route_direct(
+        demands_from_links([(0, 1), (1, 2)], 1e6, 3), cats, 1e6
+    )
+    r3 = simulate(
+        sol3, ov3, scenario=Scenario(churn=(ChurnEvent(agent=2, time=1.0),))
+    )
+    assert r3.cancelled_branches == 2
+    assert r3.makespan == pytest.approx(8.0)  # 0↔1 finishes alone
+
+
+def test_out_of_range_agent_rejected():
+    sol, ov = _line_instance()
+    for sc in (
+        Scenario(churn=(ChurnEvent(agent=7, time=1.0),)),
+        Scenario(stragglers=(StragglerEvent(agent=-1, slowdown=2.0),)),
+    ):
+        with pytest.raises(ValueError, match="agent"):
+            simulate(sol, ov, scenario=sc)
+
+
+def test_all_churned_design_prices_as_inf():
+    from repro.core.designer import design
+
+    u = random_geometric_underlay(12, radius=0.5, seed=0)
+    ov = build_overlay(u, list(u.graph.nodes)[:5])
+    cats = compute_categories(ov)
+    dead = design(
+        "ring", cats, 1e6, 5, overlay=ov, optimize_routing=False,
+        scenario=Scenario(
+            churn=tuple(ChurnEvent(agent=a, time=0.0) for a in range(5))
+        ),
+    )
+    assert dead.tau == np.inf and dead.total_time == np.inf
+
+
+def test_trivial_scenario_is_static():
+    sol, ov = _line_instance()
+    assert (
+        simulate(sol, ov, scenario=Scenario()).makespan
+        == simulate(sol, ov).makespan
+    )
+
+
+def test_scenario_rejected_by_reference_engine():
+    sol, ov = _line_instance()
+    sc = Scenario(capacity_phases=(CapacityPhase(start=1.0, scale=0.5),))
+    with pytest.raises(ValueError, match="vectorized"):
+        simulate(sol, ov, scenario=sc, engine="reference")
+
+
+def test_empty_tree_raises():
+    demand = MulticastDemand(source=0, destinations=frozenset({1}), size=1e6)
+    sol = RoutingSolution(
+        demands=(demand,), trees=(frozenset(),), completion_time=0.0,
+        method="direct", solve_seconds=0.0,
+    )
+    _, ov = _line_instance()
+    with pytest.raises(ValueError, match="empty routing tree"):
+        simulate(sol, ov)
+
+
+def test_integer_demand_sizes_are_safe():
+    """Satellite fix: int κ must not truncate the remaining-bytes array."""
+    u = line_underlay(3)
+    ov = build_overlay(u, [0, 1, 2])
+    cats = compute_categories(ov)
+    for engine in ("vectorized", "reference"):
+        ints = simulate(
+            route_direct(demands_from_links([(0, 1), (1, 2)], 10**6, 3),
+                         cats, 10**6),
+            ov, engine=engine,
+        )
+        floats = simulate(
+            route_direct(demands_from_links([(0, 1), (1, 2)], 1e6, 3),
+                         cats, 1e6),
+            ov, engine=engine,
+        )
+        assert ints.makespan == pytest.approx(floats.makespan)
+
+
+def test_runtime_scenario_bridges():
+    """stragglers/fault_tolerance helpers produce consumable scenarios."""
+    from repro.runtime.fault_tolerance import failure_scenario
+    from repro.runtime.stragglers import StragglerSimulator
+
+    sol, ov = _line_instance()
+    events = StragglerSimulator(
+        num_agents=2, prob=1.0, severity=3.0, seed=0
+    ).scenario_events(horizon=100.0, round_time=50.0)
+    assert events and all(e.slowdown == 3.0 for e in events)
+    r = simulate(sol, ov, scenario=Scenario(stragglers=events))
+    assert r.makespan == pytest.approx(24.0)  # 3× the 8s static time
+
+    sc = failure_scenario(
+        {1: 4.0}, pre_failure_slowdown=2.0, slowdown_window=2.0
+    )
+    assert sc.churn[0].time == 4.0
+    assert sc.stragglers[0].start == pytest.approx(2.0)
+    r2 = simulate(sol, ov, scenario=sc)
+    # 2s at C, 2s limping, then the peer churns away → both cancelled.
+    assert r2.cancelled_branches == 2
+
+
+def test_designer_scenario_pricing():
+    from repro.core.designer import design
+    from repro.core import mixing as mixing_lib
+
+    u = random_geometric_underlay(12, radius=0.5, seed=0)
+    ov = build_overlay(u, list(u.graph.nodes)[:5])
+    cats = compute_categories(ov)
+    static = design(
+        "ring", cats, 1e6, 5, overlay=ov, optimize_routing=False,
+    )
+    degraded = design(
+        "ring", cats, 1e6, 5, overlay=ov, optimize_routing=False,
+        scenario=Scenario(
+            capacity_phases=(CapacityPhase(start=0.0, scale=0.5),)
+        ),
+    )
+    assert degraded.sim is not None
+    assert degraded.tau == pytest.approx(2 * static.tau)
+    assert degraded.total_time == pytest.approx(2 * static.total_time)

@@ -1,0 +1,145 @@
+"""Routing scale microbenchmark: vectorized congestion-aware engine vs.
+the retained pure-Python reference at 100 agents, plus a 500-agent
+design-sweep smoke test — the regime the reference cannot touch.
+
+The head-to-head instance is the sim_scale 300-node random-geometric
+edge network with heterogeneous link capacities (0.3–3 Mbps) and a
+100-agent ring-and-chords mixing topology, routed for 8 re-routing
+rounds. Both engines must return *identical* trees on the same seed
+(hence identical τ); the vectorized engine must be ≥15× faster and never
+worse than direct routing.
+
+The second section builds a 500-agent overlay (single-source-BFS path
+construction), compiles the link×category incidence once, and runs a
+full ``sweep_iterations`` design sweep (FMMD-P grid + congestion-aware
+routing per point) to document the newly reachable scale.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import ConvergenceConstants, sweep_iterations
+from repro.net import (
+    build_overlay,
+    compile_category_incidence,
+    compute_categories,
+    demands_from_links,
+    random_geometric_underlay,
+    route_congestion_aware,
+    route_direct,
+)
+from repro.net.routing import _route_congestion_aware_reference
+from benchmarks.common import emit
+
+SPEEDUP_TARGET = 15.0
+ROUNDS = 8
+
+
+def make_instance(
+    num_agents: int,
+    extra_links: int,
+    nodes: int = 300,
+    radius: float = 0.10,
+    seed: int = 3,
+):
+    """Heterogeneous-capacity geometric underlay + ring-and-chords demands."""
+    u = random_geometric_underlay(nodes, radius=radius, seed=seed)
+    rng = np.random.default_rng(7)
+    for _, _, data in u.graph.edges(data=True):
+        data["capacity"] = 125_000.0 * rng.uniform(0.3, 3.0)
+    ov = build_overlay(u, list(u.graph.nodes)[:num_agents], method="bfs")
+    cats = compute_categories(ov)
+    links = {
+        (min(a, b), max(a, b))
+        for a, b in ((i, (i + 1) % num_agents) for i in range(num_agents))
+    }
+    while len(links) < num_agents + extra_links:
+        a, b = rng.choice(num_agents, 2, replace=False)
+        links.add((min(a, b), max(a, b)))
+    return demands_from_links(sorted(links), 1e6, num_agents), cats
+
+
+def run() -> dict:
+    m = 100
+    demands, cats = make_instance(num_agents=m, extra_links=30)
+
+    t0 = time.perf_counter()
+    vec = route_congestion_aware(demands, cats, 1e6, m, rounds=ROUNDS, seed=0)
+    t_vec = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref = _route_congestion_aware_reference(
+        demands, cats, 1e6, m, rounds=ROUNDS, seed=0
+    )
+    t_ref = time.perf_counter() - t0
+
+    assert vec.trees == ref.trees, "engines disagree on routed trees"
+    assert vec.completion_time == ref.completion_time, (
+        f"engines disagree: vectorized {vec.completion_time!r} "
+        f"!= reference {ref.completion_time!r}"
+    )
+    direct = route_direct(demands, cats, 1e6)
+    assert vec.completion_time <= direct.completion_time + 1e-9
+
+    # Amortized regime: a precompiled incidence shared across calls, the
+    # way sweep_iterations reuses it over the T grid.
+    inc = compile_category_incidence(cats, m, 1e6)
+    t0 = time.perf_counter()
+    route_congestion_aware(
+        demands, cats, 1e6, m, rounds=ROUNDS, seed=0, incidence=inc
+    )
+    t_amortized = time.perf_counter() - t0
+
+    # 500-agent design sweep: overlay + categories + FMMD-P grid with
+    # congestion-aware routing per point — untouchable before this PR.
+    t0 = time.perf_counter()
+    u = random_geometric_underlay(600, radius=0.08, seed=1)
+    ov = build_overlay(u, list(u.graph.nodes)[:500], method="bfs")
+    cats500 = compute_categories(ov)
+    t_setup = time.perf_counter() - t0
+    # T must exceed the 499-link connectivity floor for finite K(ρ).
+    t0 = time.perf_counter()
+    best = sweep_iterations(
+        cats500, 1e6, 500, iteration_grid=(550, 625), method="fmmd-p",
+        constants=ConvergenceConstants(epsilon=0.05), heuristic_rounds=2,
+    )
+    t_sweep = time.perf_counter() - t0
+    assert np.isfinite(best.total_time)
+    if best.routing.demands:
+        direct500 = route_direct(best.routing.demands, cats500, 1e6)
+        assert (
+            best.routing.completion_time
+            <= direct500.completion_time + 1e-9
+        )
+
+    return dict(
+        t_vectorized=t_vec,
+        t_reference=t_ref,
+        t_amortized=t_amortized,
+        speedup=t_ref / t_vec,
+        tau=vec.completion_time,
+        sweep_seconds=t_sweep,
+        sweep_setup_seconds=t_setup,
+        sweep_tau=best.routing.completion_time,
+        sweep_total_time=best.total_time,
+    )
+
+
+def main() -> None:
+    r = run()
+    emit(
+        "route_scale",
+        1e6 * r["t_vectorized"],
+        f"speedup={r['speedup']:.1f}x;amortized_s={r['t_amortized']:.2f};"
+        f"sweep500_s={r['sweep_seconds']:.1f};"
+        f"sweep500_setup_s={r['sweep_setup_seconds']:.1f}",
+    )
+    assert r["speedup"] >= SPEEDUP_TARGET, (
+        f"vectorized router only {r['speedup']:.1f}x faster "
+        f"(target {SPEEDUP_TARGET:.0f}x)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ def main() -> None:
         gossip_traffic,
         lemma31_validation,
         roofline_bench,
+        route_scale,
         sim_scale,
         table1_runtimes,
     )
@@ -26,6 +27,7 @@ def main() -> None:
         "roofline_bench": roofline_bench.main,
         "gossip_traffic": gossip_traffic.main,
         "sim_scale": sim_scale.main,
+        "route_scale": route_scale.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

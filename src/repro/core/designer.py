@@ -16,7 +16,7 @@ knob trading per-iteration cost against convergence speed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import MutableMapping, Sequence
 
 import numpy as np
 
@@ -28,7 +28,12 @@ from repro.core.topology_baselines import (
     prim_design,
     ring_design,
 )
-from repro.net.categories import Categories, compute_categories
+from repro.net.categories import (
+    Categories,
+    CategoryIncidence,
+    compile_category_incidence,
+    compute_categories,
+)
 from repro.net.demands import demands_from_links
 from repro.net.routing import RoutingSolution, route, route_direct
 from repro.net.simulator import Scenario, SimResult, simulate
@@ -61,6 +66,9 @@ def evaluate_design(
     milp_time_limit: float = 60.0,
     overlay: OverlayNetwork | None = None,
     scenario: Scenario | None = None,
+    incidence: CategoryIncidence | None = None,
+    routing_cache: MutableMapping | None = None,
+    heuristic_rounds: int = 8,
 ) -> DesignOutcome:
     """Route the design's demands and price its total training time.
 
@@ -73,19 +81,34 @@ def evaluate_design(
     ``outcome.sim.cancelled_branches`` for how much of W was lost), while
     a simulation that never completes (``unfinished_branches > 0``)
     prices as τ = inf rather than silently under-counting.
+
+    ``incidence`` (precompiled ``CategoryIncidence``) and
+    ``routing_cache`` (activated-link-set → ``RoutingSolution``) amortize
+    routing work across repeated calls with the same categories/κ/routing
+    settings — different FMMD iteration counts frequently activate the
+    same link set, so a grid sweep rarely re-routes.
     """
     if scenario is not None and overlay is None:
         raise ValueError("scenario pricing requires the overlay")
     links = design.activated_links
     demands = demands_from_links(links, kappa, num_agents) if links else []
     if demands:
-        if optimize_routing:
-            sol = route(
-                demands, categories, kappa, num_agents,
-                time_limit=milp_time_limit,
-            )
-        else:
-            sol = route_direct(demands, categories, kappa)
+        cache_key = frozenset(links)
+        sol = (
+            routing_cache.get(cache_key)
+            if routing_cache is not None else None
+        )
+        if sol is None:
+            if optimize_routing:
+                sol = route(
+                    demands, categories, kappa, num_agents,
+                    time_limit=milp_time_limit, incidence=incidence,
+                    heuristic_rounds=heuristic_rounds,
+                )
+            else:
+                sol = route_direct(demands, categories, kappa)
+            if routing_cache is not None:
+                routing_cache[cache_key] = sol
     else:
         sol = RoutingSolution(
             demands=(), trees=(), completion_time=0.0,
@@ -126,12 +149,18 @@ def design(
     constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
     optimize_routing: bool = True,
     scenario: Scenario | None = None,
+    milp_time_limit: float = 60.0,
+    incidence: CategoryIncidence | None = None,
+    routing_cache: MutableMapping | None = None,
+    heuristic_rounds: int = 8,
 ) -> DesignOutcome:
     """Produce and price one named design.
 
     method ∈ {"fmmd", "fmmd-w", "fmmd-p", "fmmd-wp", "clique", "ring",
               "prim", "sca"}. ``scenario`` prices the design under a
-    degraded/time-varying network (requires ``overlay``).
+    degraded/time-varying network (requires ``overlay``);
+    ``incidence``/``routing_cache`` amortize routing across repeated
+    calls (see ``evaluate_design``).
     """
     m = num_agents
     method = method.lower()
@@ -141,9 +170,9 @@ def design(
         d = fmmd(m, iterations, weight_opt=True)
     elif method == "fmmd-p":
         d = fmmd(m, iterations, categories=categories, kappa=kappa,
-                 priority=True)
+                 priority=True, incidence=incidence)
     elif method == "fmmd-wp":
-        d = fmmd_wp(m, iterations, categories, kappa)
+        d = fmmd_wp(m, iterations, categories, kappa, incidence=incidence)
     elif method == "clique":
         d = clique_design(m)
     elif method == "ring":
@@ -158,7 +187,9 @@ def design(
         raise ValueError(f"unknown design method: {method}")
     return evaluate_design(
         d, categories, kappa, m, constants, optimize_routing,
-        overlay=overlay, scenario=scenario,
+        milp_time_limit=milp_time_limit, overlay=overlay,
+        scenario=scenario, incidence=incidence,
+        routing_cache=routing_cache, heuristic_rounds=heuristic_rounds,
     )
 
 
@@ -168,13 +199,41 @@ def sweep_iterations(
     num_agents: int,
     iteration_grid: Sequence[int] = (4, 8, 12, 16, 24, 32),
     constants: mixing.ConvergenceConstants = mixing.ConvergenceConstants(),
+    method: str = "fmmd-wp",
+    overlay: OverlayNetwork | None = None,
+    scenario: Scenario | None = None,
+    optimize_routing: bool = True,
+    milp_time_limit: float = 60.0,
+    heuristic_rounds: int = 8,
 ) -> DesignOutcome:
-    """Outer search over FMMD-WP's T for the best total-time design."""
+    """Outer search over the design method's T for the best total time.
+
+    ``overlay``/``scenario`` price every grid point under a degraded or
+    time-varying network; ``optimize_routing=False`` skips the routing
+    optimizer (default paths only), ``milp_time_limit`` caps each
+    point's MILP, and ``heuristic_rounds`` tunes the congestion-aware
+    re-routing budget. The link×category incidence is compiled once and
+    the routing solutions are cached by activated-link set, so grid
+    points whose designs activate the same links are routed exactly
+    once.
+    """
+    # One compilation serves both the routing heuristic and the FMMD-P
+    # priority filter across every grid point.
+    incidence = (
+        compile_category_incidence(categories, num_agents, kappa)
+        if optimize_routing or method.lower() in ("fmmd-p", "fmmd-wp")
+        else None
+    )
+    routing_cache: dict = {}
     best: DesignOutcome | None = None
     for t in iteration_grid:
         out = design(
-            "fmmd-wp", categories, kappa, num_agents,
+            method, categories, kappa, num_agents, overlay=overlay,
             iterations=t, constants=constants,
+            optimize_routing=optimize_routing, scenario=scenario,
+            milp_time_limit=milp_time_limit, incidence=incidence,
+            routing_cache=routing_cache,
+            heuristic_rounds=heuristic_rounds,
         )
         if np.isfinite(out.total_time) and (
             best is None or out.total_time < best.total_time

@@ -24,7 +24,11 @@ import numpy as np
 
 from repro.core import mixing
 from repro.core.weight_opt import optimize_weights
-from repro.net.categories import Categories
+from repro.net.categories import (
+    Categories,
+    CategoryIncidence,
+    compile_category_incidence,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +57,106 @@ def _tau_bar(
     return categories.completion_time(uses, kappa)
 
 
+def _csr_gather(
+    ptr: np.ndarray, data: np.ndarray, ids: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate ``data[ptr[id]:ptr[id+1]]`` for every id (a multi-slice
+    gather without a Python loop), plus the owning position per entry."""
+    starts = ptr[ids]
+    lens = ptr[ids + 1] - starts
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=data.dtype), np.empty(0, dtype=np.int64)
+    cum = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    pos = np.arange(total) + np.repeat(starts - cum, lens)
+    owner = np.repeat(np.arange(ids.size), lens)
+    return data[pos], owner
+
+
+class _PriorityState:
+    """Incremental category loads for the FMMD-P atom filter (eq. 23).
+
+    The reference filter rebuilt the τ̄ link-uses dict per atom per
+    Frank-Wolfe iteration — O(|atoms| · Σ_F |F|) in Python, the designer
+    bottleneck at 100+ agents. Here the atom→category incidence (δ_F per
+    atom, counting both directed links) is flattened once, the selected
+    loads t_F live in a numpy array updated on atom selection, and each
+    iteration's candidate τ̄ table is
+
+        τ̄(sel ∪ {a}) = max(max_F κ·t_F/C_F,  max_{F ∋ a} κ·(t_F+δ)/C_F),
+
+    exact because adding an atom can only raise the loads of the
+    categories it touches. The per-element arithmetic matches
+    ``Categories.completion_time`` bit for bit, so the candidate set —
+    down to the reference's 1e-15 tie margin — is unchanged.
+    """
+
+    def __init__(
+        self,
+        atoms,
+        m: int,
+        categories: Categories,
+        kappa: float,
+        incidence: CategoryIncidence | None = None,
+    ):
+        if incidence is not None and (
+            incidence.num_agents != m
+            or incidence.kappa != kappa
+            or not incidence.matches(categories)
+        ):
+            raise ValueError("incidence does not match (categories, m, κ)")
+        inc = (
+            incidence
+            if incidence is not None
+            else compile_category_incidence(categories, m, kappa)
+        )
+        self.kappa = kappa
+        self.cap = inc.capacity
+        self.num_categories = inc.num_categories
+        self.loads = np.zeros(inc.num_categories)
+        self._inc = inc
+        self._m = m
+        atoms_arr = np.asarray(
+            [(i, j) for i, j in atoms], dtype=np.int64
+        ).reshape(-1, 2)
+        ai, aj = atoms_arr[:, 0], atoms_arr[:, 1]
+        cats_f, own_f = _csr_gather(inc.link_ptr, inc.entry_cat, ai * m + aj)
+        cats_r, own_r = _csr_gather(inc.link_ptr, inc.entry_cat, aj * m + ai)
+        nf = max(inc.num_categories, 1)
+        key = (
+            np.concatenate([own_f, own_r]) * nf
+            + np.concatenate([cats_f, cats_r])
+        )
+        ukey, counts = np.unique(key, return_counts=True)
+        self.entry_atom = ukey // nf  # atom position per (atom, cat) pair
+        self.entry_cat = ukey % nf
+        self.entry_delta = counts.astype(np.float64)  # δ ∈ {1, 2}
+
+    def select(self, atom: tuple[int, int]) -> None:
+        """Account (i, j) and (j, i) loads for a newly selected atom."""
+        i, j = atom
+        inc, m = self._inc, self._m
+        self.loads[inc.link_categories(i * m + j)] += 1.0
+        self.loads[inc.link_categories(j * m + i)] += 1.0
+
+    def current_tau(self) -> float:
+        if not self.num_categories:
+            return 0.0
+        return float(np.max(self.kappa * self.loads / self.cap))
+
+    def candidate_taus(self, num_atoms: int) -> np.ndarray:
+        """τ̄ of the tentative iterate per atom, as one vector op."""
+        tau = np.full(num_atoms, -np.inf)
+        if self.entry_atom.size:
+            np.maximum.at(
+                tau, self.entry_atom,
+                self.kappa
+                * (self.loads[self.entry_cat] + self.entry_delta)
+                / self.cap[self.entry_cat],
+            )
+        return np.maximum(tau, self.current_tau())
+
+
 def fmmd(
     m: int,
     iterations: int,
@@ -61,12 +165,15 @@ def fmmd(
     weight_opt: bool = False,
     priority: bool = False,
     allowed_links: Sequence[tuple[int, int]] | None = None,
+    incidence: CategoryIncidence | None = None,
 ) -> FMMDResult:
     """Run FMMD (Alg. 1) with optional -W / -P improvements.
 
     ``allowed_links`` restricts the atom set for non-fully-connected
     overlays (paper footnote 1). ``categories``/``kappa`` are required
-    when ``priority=True`` (the τ̄ bound needs network knowledge).
+    when ``priority=True`` (the τ̄ bound needs network knowledge);
+    ``incidence`` (a matching precompiled ``CategoryIncidence``) skips
+    the priority filter's category compilation, e.g. across a sweep.
     """
     if priority and categories is None:
         raise ValueError("FMMD-P needs categories (τ̄ bound)")
@@ -82,41 +189,50 @@ def fmmd(
     selected_links: set[tuple[int, int]] = set()
     trajectory: list[float] = [mixing.rho(w)]
 
+    num_atoms = len(atoms)
+    atoms_ij = np.asarray(atoms, dtype=np.int64).reshape(-1, 2)
+    ai, aj = atoms_ij[:, 0], atoms_ij[:, 1]
+    prio = (
+        _PriorityState(atoms, m, categories, kappa, incidence=incidence)
+        if priority else None
+    )
+
     for k in range(iterations):
-        grad = mixing.rho_gradient(w)  # eq. (18)
+        rho_k, grad = mixing.rho_and_gradient(w)  # eq. (18), one eigh
+        if k > 0:
+            trajectory.append(rho_k)  # ρ(W^(k)) from the same factoring
         gamma = 2.0 / (k + 2.0)
 
-        # Inner products <S, ∇ρ> for all atoms (eq. 19):
+        # Inner products <S, ∇ρ> for all atoms (eq. 19), vectorized:
         #   <I, G> = tr(G);  <S^(i,j), G> = tr(G) − (G_ii + G_jj − 2 G_ij).
         tr = float(np.trace(grad))
-        scores = {None: tr}
-        for (i, j) in atoms:
-            scores[(i, j)] = tr - (grad[i, i] + grad[j, j] - 2.0 * grad[i, j])
+        diag = np.diagonal(grad)
+        scores = tr - ((diag[ai] + diag[aj]) - 2.0 * grad[ai, aj])
 
+        cand_mask = None
         if priority:
             # (23): among UNSELECTED atoms, keep only those minimizing the
             # τ̄ of the tentative iterate. The identity atom constructs
             # W^(0), so it is in S(W^(k)) from the start and is excluded —
             # otherwise it would always win (it never increases τ̄) and the
             # algorithm would stall.
-            unselected = [a for a in atoms if a not in selected_links]
-            if unselected:
-                taus = {
-                    a: _tau_bar(
-                        frozenset(selected_links | {a}), categories, kappa
-                    )
-                    for a in unselected
-                }
-                best_tau = min(taus.values())
-                candidates = [
-                    a for a, t in taus.items() if t <= best_tau + 1e-15
-                ]
-            else:  # every link already activated: fall back to full search
-                candidates = [None] + atoms
-        else:
-            candidates = [None] + atoms
+            unsel = np.fromiter(
+                (a not in selected_links for a in atoms), dtype=bool,
+                count=num_atoms,
+            ) if num_atoms else np.zeros(0, dtype=bool)
+            if unsel.any():
+                taus = np.where(
+                    unsel, prio.candidate_taus(num_atoms), np.inf
+                )
+                cand_mask = unsel & (taus <= taus.min() + 1e-15)
+            # else: every link already activated → full search incl. I
 
-        atom = min(candidates, key=lambda a: scores[a])
+        if cand_mask is not None:
+            atom = atoms[int(np.argmin(np.where(cand_mask, scores, np.inf)))]
+        elif num_atoms and tr > scores.min():
+            atom = atoms[int(np.argmin(scores))]
+        else:  # identity first in candidate order: wins score ties
+            atom = None
         s = (
             np.eye(m)
             if atom is None
@@ -124,9 +240,13 @@ def fmmd(
         )
         w = (1.0 - gamma) * w + gamma * s
         selected.append(atom)
-        if atom is not None:
+        if atom is not None and atom not in selected_links:
             selected_links.add(atom)
-        trajectory.append(mixing.rho(w))
+            if prio is not None:
+                prio.select(atom)
+    rho_final = mixing.rho(w) if iterations > 0 else trajectory[0]
+    if iterations > 0:
+        trajectory.append(rho_final)  # ρ(W^(T)), reused for the result
 
     links = tuple(sorted(selected_links))
     variant = "FMMD" + ("-W" if weight_opt else "") + ("-P" if priority else "")
@@ -136,11 +256,12 @@ def fmmd(
         # weight optimization may zero out some links; recompute support
         links_w, _ = mixing.weights_from_matrix(w)
         links = tuple(links_w)
+        rho_final = mixing.rho(w)  # weight opt rewrote the iterate
     mixing.validate_mixing(w)
     return FMMDResult(
         matrix=w,
         activated_links=links,
-        rho=mixing.rho(w),
+        rho=rho_final,
         rho_trajectory=tuple(trajectory),
         selected_atoms=tuple(selected),
         design_seconds=time.perf_counter() - t0,
@@ -154,6 +275,7 @@ def fmmd_wp(
     categories: Categories,
     kappa: float,
     allowed_links: Sequence[tuple[int, int]] | None = None,
+    incidence: CategoryIncidence | None = None,
 ) -> FMMDResult:
     """FMMD-WP — the paper's best-performing variant."""
     return fmmd(
@@ -164,6 +286,7 @@ def fmmd_wp(
         weight_opt=True,
         priority=True,
         allowed_links=allowed_links,
+        incidence=incidence,
     )
 
 

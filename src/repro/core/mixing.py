@@ -94,11 +94,24 @@ def rho_gradient(w: np.ndarray) -> np.ndarray:
     For the symmetric W−J this is sign(λ*)·v* v*ᵀ with (λ*, v*) the
     extreme eigenpair by absolute value.
     """
+    return rho_and_gradient(w)[1]
+
+
+def rho_and_gradient(w: np.ndarray) -> tuple[float, np.ndarray]:
+    """(ρ(W), ∇ρ(W)) from a single eigendecomposition.
+
+    Callers that need both per step (the FMMD loop tracks the ρ
+    trajectory while following the gradient) would otherwise factor
+    W − J twice per iteration — at 500 agents the dominant sweep cost.
+    The ρ value may differ from ``rho()`` in the last ulp (LAPACK's
+    with-vectors driver vs. values-only).
+    """
     m = w.shape[0]
     eigs, vecs = np.linalg.eigh(w - ideal_matrix(m))
     k = int(np.argmax(np.abs(eigs)))
     v = vecs[:, k]
-    return math.copysign(1.0, eigs[k]) * np.outer(v, v)
+    grad = math.copysign(1.0, eigs[k]) * np.outer(v, v)
+    return float(np.abs(eigs[k])), grad
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,12 @@
 """Network substrate: underlay/overlay model, categories, routing, simulation."""
 
-from repro.net.categories import Categories, compute_categories, infer_categories
+from repro.net.categories import (
+    Categories,
+    CategoryIncidence,
+    compile_category_incidence,
+    compute_categories,
+    infer_categories,
+)
 from repro.net.demands import (
     MulticastDemand,
     activated_links_from_matrix,

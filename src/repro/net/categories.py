@@ -68,6 +68,121 @@ class Categories:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class CategoryIncidence:
+    """Precompiled link×category incidence for vectorized engines.
+
+    The analogue of the simulator's ``BranchIncidence``: every directed
+    overlay link (i, j) gets the dense id ``i·m + j``; flat-entry arrays
+    list, link-major and within each link in ``families`` order (the
+    order ``_link_category_costs``-style dict loops would encounter
+    them), the categories the link belongs to and their κ/C_F
+    coefficients. Compile once per (categories, κ, m); reuse across
+    routing calls and design-sweep grid points.
+    """
+
+    num_agents: int
+    kappa: float
+    capacity: np.ndarray  # [nF] C_F in ``families`` order
+    entry_link: np.ndarray  # [nnz] dense link id i·m + j, link-major
+    entry_cat: np.ndarray  # [nnz] category index per entry
+    entry_coef: np.ndarray  # [nnz] κ / C_F per entry
+    link_ptr: np.ndarray  # [m²+1] CSR slices into entry_* per link id
+    source: "Categories | None" = None  # what this was compiled from
+
+    def matches(self, categories: "Categories") -> bool:
+        """Cheap fingerprint check that this incidence was compiled from
+        ``categories``: object identity (the amortizing call paths pass
+        the same object through), else an O(nF) capacity-vector
+        comparison. Equal capacities with different memberships would
+        slip through the fallback — pass the same object to be exact."""
+        if self.source is categories:
+            return True
+        caps = list(categories.capacity.values())
+        return len(caps) == self.num_categories and np.array_equal(
+            self.capacity, np.asarray(caps, dtype=np.float64)
+        )
+
+    @property
+    def num_categories(self) -> int:
+        return self.capacity.size
+
+    def link_id(self, i: int, j: int) -> int:
+        return i * self.num_agents + j
+
+    def link_categories(self, link_id: int) -> np.ndarray:
+        """Category indices of one dense link id (CSR slice)."""
+        return self.entry_cat[self.link_ptr[link_id]:self.link_ptr[link_id + 1]]
+
+    def link_costs(self, cat_weights: np.ndarray) -> np.ndarray:
+        """Per-link Σ_F (κ/C_F)·w_F as a flat [m²] array.
+
+        ``np.bincount`` accumulates in entry order, so each link's sum is
+        added in exactly the per-link order a Python ``sum`` over its
+        category list would use — bit-identical costs.
+        """
+        return np.bincount(
+            self.entry_link,
+            weights=self.entry_coef * cat_weights[self.entry_cat],
+            minlength=self.num_agents * self.num_agents,
+        )
+
+    def loads_from_uses(
+        self, link_uses: Mapping[tuple[int, int], int]
+    ) -> np.ndarray:
+        """t_F vector (``Categories.load_vector`` as an array)."""
+        loads = np.zeros(self.num_categories)
+        for (i, j), n in link_uses.items():
+            if n:
+                loads[self.link_categories(self.link_id(i, j))] += float(n)
+        return loads
+
+    def completion_time(self, loads: np.ndarray) -> float:
+        """max_F κ·t_F/C_F — same per-element arithmetic as the
+        dict-based ``Categories.completion_time``."""
+        if not self.num_categories:
+            return 0.0
+        return float(np.max(self.kappa * loads / self.capacity))
+
+
+def compile_category_incidence(
+    categories: Categories, num_agents: int, kappa: float
+) -> CategoryIncidence:
+    """Build the flat link×category entry arrays for ``categories``.
+
+    Entries are sorted by dense link id with a stable sort, so the
+    within-link category order equals the ``families`` iteration order.
+    """
+    m = num_agents
+    fams = categories.families
+    cap = np.array([categories.capacity[F] for F in fams], dtype=np.float64)
+    link_ids: list[int] = []
+    cat_ids: list[int] = []
+    for fi, F in enumerate(fams):
+        for (i, j) in F:
+            if not (0 <= i < m and 0 <= j < m):
+                raise ValueError(
+                    f"category link ({i},{j}) out of range for m={m}"
+                )
+            link_ids.append(i * m + j)
+            cat_ids.append(fi)
+    link = np.asarray(link_ids, dtype=np.int64)
+    cat = np.asarray(cat_ids, dtype=np.int64)
+    order = np.argsort(link, kind="stable")
+    link, cat = link[order], cat[order]
+    coef = kappa / cap
+    return CategoryIncidence(
+        num_agents=m,
+        kappa=kappa,
+        capacity=cap,
+        entry_link=link,
+        entry_cat=cat,
+        entry_coef=coef[cat] if cat.size else np.empty(0),
+        link_ptr=np.searchsorted(link, np.arange(m * m + 1)),
+        source=categories,
+    )
+
+
 def compute_categories(overlay: OverlayNetwork) -> Categories:
     """Ground-truth categories from full knowledge of the underlay.
 

@@ -149,17 +149,31 @@ class OverlayNetwork:
 
 
 def build_overlay(
-    underlay: Underlay, agent_nodes: Sequence[int]
+    underlay: Underlay, agent_nodes: Sequence[int], method: str = "pairwise"
 ) -> OverlayNetwork:
     """Place agents on ``agent_nodes`` and route via hop-count shortest paths.
 
     Symmetry is enforced by computing each path once per unordered pair.
+    ``method="bfs"`` runs one single-source BFS per agent instead of one
+    search per pair — the only way to build 500+-agent overlays in
+    reasonable time (m BFS sweeps vs m²/2 searches). Hop counts are
+    identical; among equal-length paths the BFS tie-break may differ from
+    the pairwise search, so the default stays "pairwise" for
+    reproducibility of existing category structures.
     """
     agents = tuple(agent_nodes)
     paths: dict[tuple[int, int], tuple[int, ...]] = {}
-    for i in range(len(agents)):
-        for j in range(i + 1, len(agents)):
-            paths[(i, j)] = underlay.shortest_path(agents[i], agents[j])
+    if method == "pairwise":
+        for i in range(len(agents)):
+            for j in range(i + 1, len(agents)):
+                paths[(i, j)] = underlay.shortest_path(agents[i], agents[j])
+    elif method == "bfs":
+        for i in range(len(agents)):
+            sp = nx.single_source_shortest_path(underlay.graph, agents[i])
+            for j in range(i + 1, len(agents)):
+                paths[(i, j)] = tuple(sp[agents[j]])
+    else:
+        raise ValueError(f"unknown overlay build method {method!r}")
     ov = OverlayNetwork(underlay=underlay, agents=agents, paths=paths)
     ov.validate()
     return ov

@@ -37,3 +37,62 @@ def test_sweep_iterations_returns_finite(roofnet_categories):
         iteration_grid=(8, 12), constants=CONSTS,
     )
     assert np.isfinite(out.total_time)
+
+
+def test_sweep_iterations_forwards_scenario_and_routing_flags(
+    roofnet_overlay, roofnet_categories
+):
+    """Satellite: the sweep can price the T grid under a scenario and
+    skip the routing optimizer / cap the MILP."""
+    from repro.net import CapacityPhase, Scenario
+
+    plain = sweep_iterations(
+        roofnet_categories, PAPER_MODEL_BYTES, 10,
+        iteration_grid=(12,), constants=CONSTS, overlay=roofnet_overlay,
+        optimize_routing=False,
+    )
+    degraded = sweep_iterations(
+        roofnet_categories, PAPER_MODEL_BYTES, 10,
+        iteration_grid=(12,), constants=CONSTS, overlay=roofnet_overlay,
+        optimize_routing=False,
+        scenario=Scenario(
+            capacity_phases=(CapacityPhase(start=0.0, scale=0.5),)
+        ),
+    )
+    assert plain.sim is None and degraded.sim is not None
+    assert degraded.tau == pytest.approx(2 * plain.tau)
+    assert degraded.total_time == pytest.approx(2 * plain.total_time)
+    capped = sweep_iterations(
+        roofnet_categories, PAPER_MODEL_BYTES, 10,
+        iteration_grid=(12,), constants=CONSTS, milp_time_limit=5.0,
+    )
+    assert np.isfinite(capped.total_time)
+
+
+def test_sweep_routing_cache_reuses_solutions(roofnet_categories):
+    """Grid points activating the same link set are routed once."""
+    from repro.core.designer import evaluate_design
+    from repro.core.fmmd import fmmd
+
+    d = fmmd(10, 8)
+    cache: dict = {}
+    a = evaluate_design(
+        d, roofnet_categories, PAPER_MODEL_BYTES, 10, constants=CONSTS,
+        optimize_routing=False, routing_cache=cache,
+    )
+    assert len(cache) == 1
+    b = evaluate_design(
+        d, roofnet_categories, PAPER_MODEL_BYTES, 10, constants=CONSTS,
+        optimize_routing=False, routing_cache=cache,
+    )
+    assert b.routing is a.routing  # same object: served from the cache
+
+
+def test_sweep_method_parameter(roofnet_overlay, roofnet_categories):
+    out = sweep_iterations(
+        roofnet_categories, PAPER_MODEL_BYTES, 10,
+        iteration_grid=(12,), constants=CONSTS, method="fmmd-p",
+        optimize_routing=False,
+    )
+    assert out.design.variant == "FMMD-P"
+    assert np.isfinite(out.total_time)

@@ -1,8 +1,15 @@
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import mixing
-from repro.core.fmmd import _tau_bar, fmmd, fmmd_wp, theorem35_bound
+from repro.core.fmmd import (
+    _PriorityState,
+    _tau_bar,
+    fmmd,
+    fmmd_wp,
+    theorem35_bound,
+)
 
 
 def test_activated_links_bounded_by_iterations(roofnet_categories):
@@ -29,6 +36,49 @@ def test_priority_reduces_tau_bar(roofnet_categories):
     tb = lambda r: _tau_bar(frozenset(r.activated_links),
                             roofnet_categories, kappa)
     assert tb(prio) <= tb(plain) + 1e-9
+
+
+def _categories_for_priority_tests():
+    """Module-cached 10-agent roofnet categories (the @given fallback
+    wrapper cannot inject pytest fixtures)."""
+    global _PRIO_CATS
+    try:
+        return _PRIO_CATS
+    except NameError:
+        from repro.net import (
+            build_overlay, compute_categories, lowest_degree_nodes,
+            roofnet_like,
+        )
+
+        u = roofnet_like(seed=0)
+        _PRIO_CATS = compute_categories(
+            build_overlay(u, lowest_degree_nodes(u, 10))
+        )
+        return _PRIO_CATS
+
+
+@given(seed=st.integers(0, 50), picks=st.integers(0, 6))
+@settings(max_examples=10, deadline=None)
+def test_priority_state_matches_tau_bar(seed, picks):
+    """The vectorized FMMD-P filter's candidate τ̄ table is bitwise equal
+    to the reference per-atom ``_tau_bar`` rebuild, at any loads state."""
+    cats = _categories_for_priority_tests()
+    m, kappa = 10, 1e6
+    atoms = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    state = _PriorityState(atoms, m, cats, kappa)
+    rng = np.random.default_rng(seed)
+    selected: set = set()
+    for _ in range(picks):
+        a = atoms[int(rng.integers(len(atoms)))]
+        if a not in selected:
+            selected.add(a)
+            state.select(a)
+    assert state.current_tau() == _tau_bar(frozenset(selected), cats, kappa)
+    taus = state.candidate_taus(len(atoms))
+    for q, a in enumerate(atoms):
+        if a in selected:
+            continue
+        assert taus[q] == _tau_bar(frozenset(selected | {a}), cats, kappa)
 
 
 def test_weight_opt_improves_rho(roofnet_categories):

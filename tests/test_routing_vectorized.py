@@ -1,0 +1,150 @@
+"""Vectorized congestion-aware router: parity with the retained
+reference engine, CategoryIncidence consistency, the MILP-skip front
+door, and heuristic quality vs. the exact MILP."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.net import (
+    build_overlay,
+    compile_category_incidence,
+    compute_categories,
+    demands_from_links,
+    random_geometric_underlay,
+    route,
+    route_congestion_aware,
+    route_direct,
+    route_milp,
+)
+from repro.net.routing import (
+    _route_congestion_aware_reference,
+    validate_solution,
+)
+
+
+def _random_instance(seed: int, m: int, kappa: float = 1e6):
+    u = random_geometric_underlay(14, radius=0.45, seed=seed)
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.5
+    ] or [(0, 1)]
+    return demands_from_links(links, kappa, m), cats
+
+
+@given(seed=st.integers(0, 80), m=st.integers(4, 8))
+@settings(max_examples=15, deadline=None)
+def test_vectorized_router_matches_reference(seed, m):
+    """Property: same seed → identical trees, hence τ_vec ≤ τ_ref (with
+    equality) and never worse than direct routing."""
+    demands, cats = _random_instance(seed, m)
+    ref = _route_congestion_aware_reference(demands, cats, 1e6, m, seed=seed)
+    vec = route_congestion_aware(demands, cats, 1e6, m, seed=seed)
+    assert vec.trees == ref.trees
+    assert vec.completion_time == ref.completion_time
+    assert vec.completion_time <= ref.completion_time + 1e-12
+    direct = route_direct(demands, cats, 1e6)
+    assert vec.completion_time <= direct.completion_time + 1e-9
+    validate_solution(vec, m)
+
+
+@given(seed=st.integers(0, 50), m=st.integers(4, 7))
+@settings(max_examples=10, deadline=None)
+def test_precompiled_incidence_is_equivalent(seed, m):
+    """Passing a precompiled CategoryIncidence must not change results."""
+    demands, cats = _random_instance(seed, m)
+    inc = compile_category_incidence(cats, m, 1e6)
+    a = route_congestion_aware(demands, cats, 1e6, m, seed=seed)
+    b = route_congestion_aware(
+        demands, cats, 1e6, m, seed=seed, incidence=inc
+    )
+    assert a.trees == b.trees
+    assert a.completion_time == b.completion_time
+
+
+@given(seed=st.integers(0, 60), m=st.integers(4, 7))
+@settings(max_examples=10, deadline=None)
+def test_incidence_loads_match_dict_path(seed, m):
+    """CategoryIncidence load/completion arithmetic ≡ the Categories
+    dict implementation on arbitrary link-use maps."""
+    demands, cats = _random_instance(seed, m)
+    inc = compile_category_incidence(cats, m, 1e6)
+    sol = route_direct(demands, cats, 1e6)
+    uses = sol.link_uses()
+    loads = inc.loads_from_uses(uses)
+    t = cats.load_vector(uses)
+    for fi, F in enumerate(cats.families):
+        assert loads[fi] == t[F]
+    assert inc.completion_time(loads) == cats.completion_time(uses, 1e6)
+
+
+def test_incidence_rejects_mismatched_instance():
+    demands, cats = _random_instance(0, 5)
+    inc = compile_category_incidence(cats, 5, 1e6)
+    with pytest.raises(ValueError, match="incidence compiled"):
+        route_congestion_aware(demands, cats, 2e6, 5, incidence=inc)
+    _, other = _random_instance(7, 5)  # same m/κ, different categories
+    with pytest.raises(ValueError, match="different categories"):
+        route_congestion_aware(demands, other, 1e6, 5, incidence=inc)
+
+
+def test_route_empty_demands_has_metadata():
+    _, cats = _random_instance(0, 5)
+    sol = route([], cats, 1e6, 5)
+    assert sol.method == "empty"
+    assert sol.metadata["candidate_times"] == {}
+
+
+def test_route_records_candidate_times(roofnet_categories):
+    kappa = 1e6
+    demands = demands_from_links([(0, 1), (2, 3)], kappa, 10)
+    best = route(demands, roofnet_categories, kappa, 10, time_limit=30)
+    times = best.metadata["candidate_times"]
+    assert "direct" in times
+    assert times[best.method] == best.completion_time
+    assert all(best.completion_time <= t + 1e-12 for t in times.values())
+
+
+def test_route_skips_heuristic_when_milp_optimal(roofnet_categories):
+    """Satellite: a proven-optimal MILP makes the heuristic redundant."""
+    kappa = 1e6
+    demands = demands_from_links([(0, 1), (2, 3)], kappa, 10)
+    milp = route_milp(demands, roofnet_categories, kappa, 10, time_limit=30)
+    assert milp is not None and milp.metadata["milp_status"] == 0
+    best = route(demands, roofnet_categories, kappa, 10, time_limit=30)
+    times = best.metadata["candidate_times"]
+    assert "milp" in times and "congestion_aware" not in times
+
+
+def test_route_runs_heuristic_when_milp_out_of_budget(roofnet_categories):
+    kappa = 1e6
+    demands = demands_from_links([(0, 1), (2, 3)], kappa, 10)
+    best = route(
+        demands, roofnet_categories, kappa, 10, milp_var_budget=0,
+        time_limit=30,
+    )
+    times = best.metadata["candidate_times"]
+    assert "congestion_aware" in times and "milp" not in times
+
+
+@given(seed=st.integers(0, 30), m=st.integers(5, 7))
+@settings(max_examples=6, deadline=None)
+def test_heuristic_within_factor_of_milp(seed, m):
+    """Satellite: congestion-aware τ ≤ 1.5 × MILP τ on small instances."""
+    rng = np.random.default_rng(seed)
+    u = random_geometric_underlay(14, radius=0.45, seed=seed)
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.35
+    ][:4] or [(0, 1)]
+    demands = demands_from_links(links, 1e6, m)
+    milp = route_milp(demands, cats, 1e6, m, time_limit=20)
+    if milp is None or milp.metadata["milp_status"] != 0:
+        pytest.skip("MILP did not prove optimality in time")
+    heur = route_congestion_aware(demands, cats, 1e6, m, seed=seed)
+    assert heur.completion_time <= 1.5 * milp.completion_time + 1e-9

@@ -91,6 +91,36 @@ def test_maxmin_rate_vectors_match(seed, m):
     assert np.array_equal(ref, vec)
 
 
+@given(seed=st.integers(0, 80), m=st.integers(3, 7), relay=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_batched_engine_makespan_parity(seed, m, relay):
+    """Satellite: the opt-in batched water-filling engine (freeze all
+    tied bottlenecks per round) agrees with the default engine on the
+    makespan to rtol=1e-9, and never takes more allocation rounds."""
+    sol, ov = _random_instance(seed, m, relay=relay)
+    vec = simulate(sol, ov, engine="vectorized")
+    bat = simulate(sol, ov, engine="batched")
+    assert bat.makespan == pytest.approx(vec.makespan, rel=1e-9)
+    assert np.allclose(
+        bat.flow_completion, vec.flow_completion, rtol=1e-9
+    )
+
+
+def test_batched_engine_scenario_parity():
+    """Batched engine consumes scenarios like the default one."""
+    sol, ov = _line_instance()
+    sc = Scenario(capacity_phases=(CapacityPhase(start=4.0, scale=0.5),))
+    assert simulate(sol, ov, scenario=sc, engine="batched").makespan == (
+        pytest.approx(12.0)
+    )
+
+
+def test_unknown_engine_rejected():
+    sol, ov = _line_instance()
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(sol, ov, engine="turbo")
+
+
 @given(m=st.integers(3, 9), seed=st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_gossip_bytes_bounded_by_clique(m, seed):

@@ -2,6 +2,10 @@
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+
 from repro.core import ConvergenceConstants
 from repro.net import (
     PAPER_MODEL_BYTES,
@@ -25,5 +29,23 @@ def paper_scenario(seed: int = 0):
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """Benchmark output contract: name,us_per_call,derived CSV."""
+    """Benchmark output contract: name,us_per_call,derived CSV.
+
+    When ``$BENCH_JSON`` names a file, the record is also appended there
+    as one JSON line (name/us_per_call/derived/timestamp) — the nightly
+    workflow uploads that file as an artifact so benchmark history is a
+    tracked time series, not just a pass/fail floor.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    path = os.environ.get("BENCH_JSON")
+    if path:
+        record = {
+            "name": name,
+            "us_per_call": us_per_call,
+            "derived": derived,
+            "timestamp": datetime.datetime.now(
+                datetime.timezone.utc
+            ).isoformat(),
+        }
+        with open(path, "a") as f:
+            f.write(json.dumps(record) + "\n")

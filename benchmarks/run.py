@@ -13,6 +13,7 @@ def main() -> None:
         fig5_training,
         gossip_traffic,
         lemma31_validation,
+        phase_routing,
         roofline_bench,
         route_scale,
         sim_scale,
@@ -28,6 +29,7 @@ def main() -> None:
         "gossip_traffic": gossip_traffic.main,
         "sim_scale": sim_scale.main,
         "route_scale": route_scale.main,
+        "phase_routing": phase_routing.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

@@ -35,8 +35,19 @@ from repro.net.categories import (
     compute_categories,
 )
 from repro.net.demands import demands_from_links
-from repro.net.routing import RoutingSolution, route, route_direct
-from repro.net.simulator import Scenario, SimResult, simulate
+from repro.net.routing import (
+    PhasedRoutingSolution,
+    RoutingSolution,
+    route,
+    route_direct,
+    route_time_expanded,
+)
+from repro.net.simulator import (
+    Scenario,
+    SimResult,
+    simulate,
+    simulate_phased,
+)
 from repro.net.topology import OverlayNetwork
 
 
@@ -49,7 +60,13 @@ class DesignOutcome:
     rho: float
     iterations_to_eps: float
     total_time: float    # τ · K(ρ) — objective (15)
-    sim: SimResult | None = None  # fluid simulation (scenario pricing)
+    sim: SimResult | None = None  # static schedule under the scenario
+    # Phase-adaptive (time-expanded) schedule, when priced alongside the
+    # static one via ``reroute_per_phase=True``:
+    phased_routing: PhasedRoutingSolution | None = None
+    sim_phased: SimResult | None = None
+    tau_static_sched: float = float("nan")  # simulated τ, static schedule
+    tau_phased: float = float("nan")        # simulated τ, phased schedule
 
     @property
     def name(self) -> str:
@@ -69,6 +86,7 @@ def evaluate_design(
     incidence: CategoryIncidence | None = None,
     routing_cache: MutableMapping | None = None,
     heuristic_rounds: int = 8,
+    reroute_per_phase: bool = False,
 ) -> DesignOutcome:
     """Route the design's demands and price its total training time.
 
@@ -79,17 +97,34 @@ def evaluate_design(
     churn before deployment. Churn-cancelled exchanges are priced as
     renormalized-mixing rounds (the survivors' completion time; see
     ``outcome.sim.cancelled_branches`` for how much of W was lost), while
-    a simulation that never completes (``unfinished_branches > 0``)
-    prices as τ = inf rather than silently under-counting.
+    a simulation that never completes (``unfinished_branches > 0``) or
+    delivers nothing (every flow fully churn-cancelled — all-NaN
+    ``flow_completion``) prices as τ = inf rather than silently
+    under-counting.
+
+    ``reroute_per_phase=True`` additionally prices the phase-adaptive
+    schedule (``route_time_expanded`` against the scenario's capacity
+    phases): both schedules are simulated, both τ values land in
+    ``tau_static_sched``/``tau_phased`` (with the simulations in
+    ``sim``/``sim_phased`` and the schedule in ``phased_routing``), and
+    the design is priced at the better of the two — the schedule an
+    operator would actually deploy. Requires ``optimize_routing``.
 
     ``incidence`` (precompiled ``CategoryIncidence``) and
-    ``routing_cache`` (activated-link-set → ``RoutingSolution``) amortize
-    routing work across repeated calls with the same categories/κ/routing
-    settings — different FMMD iteration counts frequently activate the
-    same link set, so a grid sweep rarely re-routes.
+    ``routing_cache`` (activated-link-set → ``RoutingSolution``;
+    phase-adaptive segments under ``(link-set, phase-scale)`` keys)
+    amortize routing work across repeated calls with the same
+    categories/κ/routing settings — different FMMD iteration counts
+    frequently activate the same link set, so a grid sweep rarely
+    re-routes.
     """
     if scenario is not None and overlay is None:
         raise ValueError("scenario pricing requires the overlay")
+    if reroute_per_phase and not optimize_routing:
+        raise ValueError(
+            "reroute_per_phase re-optimizes routing per capacity phase; "
+            "it requires optimize_routing=True"
+        )
     links = design.activated_links
     demands = demands_from_links(links, kappa, num_agents) if links else []
     if demands:
@@ -114,17 +149,39 @@ def evaluate_design(
             demands=(), trees=(), completion_time=0.0,
             method="empty", solve_seconds=0.0,
         )
-    sim = None
-    tau = sol.completion_time
-    if scenario is not None and demands:
-        sim = simulate(sol, overlay, scenario=scenario)
-        # A truncated run, or one where churn cancelled everything before
-        # a single branch finished, must not price as cheap/free.
-        undelivered = sim.makespan == 0.0 and sim.cancelled_branches > 0
-        tau = (
+
+    def _priced_tau(sim: SimResult) -> float:
+        # A truncated run, or one where churn cancelled every flow
+        # outright (all-NaN completions), must not price as cheap/free.
+        undelivered = sim.cancelled_branches > 0 and all(
+            np.isnan(c) for c in sim.flow_completion
+        )
+        return (
             np.inf if sim.unfinished_branches or undelivered
             else sim.makespan
         )
+
+    sim = None
+    sim_phased = None
+    phased = None
+    tau = sol.completion_time
+    tau_static_sched = float("nan")
+    tau_phased = float("nan")
+    if scenario is not None and demands:
+        sim = simulate(sol, overlay, scenario=scenario)
+        tau = tau_static_sched = _priced_tau(sim)
+        if reroute_per_phase and scenario.capacity_phases:
+            phased = route_time_expanded(
+                demands, categories, scenario, kappa, num_agents,
+                time_limit=milp_time_limit, incidence=incidence,
+                heuristic_rounds=heuristic_rounds,
+                routing_cache=routing_cache, cache_key=frozenset(links),
+                base_solution=sol,  # unscaled segments reuse the static route
+            )
+            sim_phased = simulate_phased(phased, overlay, scenario=scenario)
+            tau_phased = _priced_tau(sim_phased)
+            # Deploy whichever schedule the scenario actually favors.
+            tau = min(tau_static_sched, tau_phased)
     rho_v = design.rho
     k_eps = mixing.iterations_to_converge(rho_v, num_agents, constants)
     return DesignOutcome(
@@ -136,6 +193,10 @@ def evaluate_design(
         iterations_to_eps=k_eps,
         total_time=tau * k_eps,
         sim=sim,
+        phased_routing=phased,
+        sim_phased=sim_phased,
+        tau_static_sched=tau_static_sched,
+        tau_phased=tau_phased,
     )
 
 
@@ -153,12 +214,15 @@ def design(
     incidence: CategoryIncidence | None = None,
     routing_cache: MutableMapping | None = None,
     heuristic_rounds: int = 8,
+    reroute_per_phase: bool = False,
 ) -> DesignOutcome:
     """Produce and price one named design.
 
     method ∈ {"fmmd", "fmmd-w", "fmmd-p", "fmmd-wp", "clique", "ring",
               "prim", "sca"}. ``scenario`` prices the design under a
     degraded/time-varying network (requires ``overlay``);
+    ``reroute_per_phase`` additionally prices the phase-adaptive
+    schedule (see ``evaluate_design``);
     ``incidence``/``routing_cache`` amortize routing across repeated
     calls (see ``evaluate_design``).
     """
@@ -190,6 +254,7 @@ def design(
         milp_time_limit=milp_time_limit, overlay=overlay,
         scenario=scenario, incidence=incidence,
         routing_cache=routing_cache, heuristic_rounds=heuristic_rounds,
+        reroute_per_phase=reroute_per_phase,
     )
 
 
@@ -205,17 +270,21 @@ def sweep_iterations(
     optimize_routing: bool = True,
     milp_time_limit: float = 60.0,
     heuristic_rounds: int = 8,
+    reroute_per_phase: bool = False,
 ) -> DesignOutcome:
     """Outer search over the design method's T for the best total time.
 
     ``overlay``/``scenario`` price every grid point under a degraded or
-    time-varying network; ``optimize_routing=False`` skips the routing
-    optimizer (default paths only), ``milp_time_limit`` caps each
-    point's MILP, and ``heuristic_rounds`` tunes the congestion-aware
-    re-routing budget. The link×category incidence is compiled once and
-    the routing solutions are cached by activated-link set, so grid
-    points whose designs activate the same links are routed exactly
-    once.
+    time-varying network; ``reroute_per_phase`` prices the
+    phase-adaptive schedule alongside the static one at every grid
+    point (see ``evaluate_design``); ``optimize_routing=False`` skips
+    the routing optimizer (default paths only), ``milp_time_limit``
+    caps each point's MILP, and ``heuristic_rounds`` tunes the
+    congestion-aware re-routing budget. The link×category incidence is
+    compiled once and the routing solutions are cached by
+    activated-link set — and, for phase-adaptive segments, by
+    (activated-link set, phase scale) — so grid points whose designs
+    activate the same links are routed exactly once per phase.
     """
     # One compilation serves both the routing heuristic and the FMMD-P
     # priority filter across every grid point.
@@ -234,6 +303,7 @@ def sweep_iterations(
             milp_time_limit=milp_time_limit, incidence=incidence,
             routing_cache=routing_cache,
             heuristic_rounds=heuristic_rounds,
+            reroute_per_phase=reroute_per_phase,
         )
         if np.isfinite(out.total_time) and (
             best is None or out.total_time < best.total_time

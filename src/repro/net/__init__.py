@@ -13,11 +13,13 @@ from repro.net.demands import (
     demands_from_links,
 )
 from repro.net.routing import (
+    PhasedRoutingSolution,
     RoutingSolution,
     route,
     route_congestion_aware,
     route_direct,
     route_milp,
+    route_time_expanded,
 )
 from repro.net.simulator import (
     BranchIncidence,
@@ -30,6 +32,7 @@ from repro.net.simulator import (
     compile_incidence,
     lemma31_time,
     simulate,
+    simulate_phased,
 )
 from repro.net.topology import (
     MBPS,

@@ -37,11 +37,16 @@ class Categories:
     ``members[F]``  — the underlay directed edges in Γ_F (may be empty in
                       inferred mode, where only capacities are known).
     ``capacity[F]`` — bottleneck capacity C_F = min_{e ∈ Γ_F} C_e.
+    ``edge_capacity`` — base capacity per member underlay edge (set by
+                      ``compute_categories``; None in inferred mode).
+                      Needed to re-derive C_F under per-edge capacity
+                      scaling, where the bottleneck edge may change.
     Keys F are frozensets of directed overlay links (agent-index pairs).
     """
 
     members: Mapping[frozenset, tuple[tuple[int, int], ...]]
     capacity: Mapping[frozenset, float]
+    edge_capacity: Mapping[tuple[int, int], float] | None = None
 
     @property
     def families(self) -> tuple[frozenset, ...]:
@@ -65,6 +70,60 @@ class Categories:
         return max(
             (kappa * t[F] / self.capacity[F] for F in self.families),
             default=0.0,
+        )
+
+    def scaled(
+        self, scale: "float | Mapping[tuple[int, int], float]"
+    ) -> "Categories":
+        """Categories under phase-scaled capacities (C_F of one
+        ``CapacityPhase``).
+
+        Routing paths are capacity-independent, so the family structure
+        is unchanged; only C_F moves. A scalar ``scale`` multiplies every
+        C_F directly (min commutes with a uniform positive factor) —
+        ``scale == 1.0`` returns ``self`` so callers keep object
+        identity on the trivial phase. A per-edge Mapping (keyed like
+        ``CapacityPhase.scale``, either direction, missing edges 1.0)
+        re-derives C_F = min_{e ∈ Γ_F} f_e·C_e from the member edges,
+        which requires ground-truth ``members``/``edge_capacity``
+        (``compute_categories``; inferred categories raise).
+        """
+        if not isinstance(scale, Mapping):
+            f = float(scale)
+            if f <= 0:
+                raise ValueError("capacity scale must be positive")
+            if f == 1.0:
+                return self
+            return Categories(
+                members=self.members,
+                capacity={F: c * f for F, c in self.capacity.items()},
+                edge_capacity=(
+                    {e: c * f for e, c in self.edge_capacity.items()}
+                    if self.edge_capacity is not None else None
+                ),
+            )
+        if self.edge_capacity is None or not all(self.members.values()):
+            raise ValueError(
+                "per-edge capacity scaling needs ground-truth members "
+                "and edge capacities (compute_categories); inferred "
+                "categories only support scalar scales"
+            )
+
+        def factor(e: tuple[int, int]) -> float:
+            return float(scale.get(e, scale.get((e[1], e[0]), 1.0)))
+
+        capacity = {
+            F: min(self.edge_capacity[e] * factor(e) for e in edges)
+            for F, edges in self.members.items()
+        }
+        if any(c <= 0 for c in capacity.values()):
+            raise ValueError("capacity scale must be positive")
+        return Categories(
+            members=self.members,
+            capacity=capacity,
+            edge_capacity={
+                e: c * factor(e) for e, c in self.edge_capacity.items()
+            },
         )
 
 
@@ -144,6 +203,31 @@ class CategoryIncidence:
             return 0.0
         return float(np.max(self.kappa * loads / self.capacity))
 
+    def rescaled(self, categories: "Categories") -> "CategoryIncidence":
+        """Same link×category structure under phase-scaled capacities.
+
+        ``categories`` must be a capacity-only rescale of the categories
+        this incidence was compiled from (``Categories.scaled``): the
+        families — and their iteration order — are unchanged, so the
+        flat entry arrays are shared and only ``capacity``/``entry_coef``
+        are rebuilt. This is how per-phase incidences are compiled once
+        per scenario instead of once per (phase, call).
+        """
+        cap = np.asarray(list(categories.capacity.values()), dtype=np.float64)
+        if cap.size != self.num_categories:
+            raise ValueError(
+                f"rescaled categories have {cap.size} families, "
+                f"incidence was compiled for {self.num_categories}"
+            )
+        coef = self.kappa / cap
+        return dataclasses.replace(
+            self,
+            capacity=cap,
+            entry_coef=coef[self.entry_cat] if self.entry_cat.size
+            else np.empty(0),
+            source=categories,
+        )
+
 
 def compile_category_incidence(
     categories: Categories, num_agents: int, kappa: float
@@ -196,15 +280,18 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
 
     members: dict[frozenset, list] = {}
     capacity: dict[frozenset, float] = {}
+    edge_capacity: dict[tuple[int, int], float] = {}
     for e, links in edge_to_links.items():
         F = frozenset(links)
         members.setdefault(F, []).append(e)
         c = overlay.underlay.capacity(*e)
+        edge_capacity[e] = c
         capacity[F] = min(capacity.get(F, np.inf), c)
 
     return Categories(
         members={F: tuple(v) for F, v in members.items()},
         capacity=capacity,
+        edge_capacity=edge_capacity,
     )
 
 

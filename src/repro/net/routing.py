@@ -39,7 +39,7 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable, Mapping, MutableMapping, Sequence
 
 import numpy as np
 
@@ -669,3 +669,193 @@ def route(
         s.method: s.completion_time for s in candidates
     }
     return dataclasses.replace(best, metadata=meta)
+
+
+# ---------------------------------------------------------------------------
+# Phase-adaptive (time-expanded) routing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasedRoutingSolution:
+    """One routing per capacity phase plus the breakpoint schedule.
+
+    ``solutions[k]`` is the routing used on ``[boundaries[k],
+    boundaries[k+1])`` (the last segment runs to ∞); ``boundaries[0]``
+    is always 0.0. Segment 0 routes against the base categories, so on
+    a trivial scenario the whole object degenerates to the static
+    ``route()`` answer (bitwise — property-tested).
+    ``completion_time`` is segment 0's closed-form τ (the static value
+    if phase 0 capacities held forever); the exact phased makespan
+    comes from ``repro.net.simulate_phased``.
+    """
+
+    demands: tuple[MulticastDemand, ...]
+    boundaries: tuple[float, ...]
+    solutions: tuple["RoutingSolution", ...]
+    completion_time: float
+    method: str
+    solve_seconds: float
+    metadata: Mapping | None = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    def __post_init__(self):
+        if len(self.boundaries) != len(self.solutions):
+            raise ValueError("one routing solution per boundary required")
+        if not self.boundaries or self.boundaries[0] != 0.0:
+            raise ValueError("first segment must start at t=0")
+        if any(
+            b <= a for a, b in zip(self.boundaries, self.boundaries[1:])
+        ):
+            raise ValueError("boundaries must be strictly increasing")
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.solutions)
+
+    @property
+    def is_static(self) -> bool:
+        """True when every segment reuses segment 0's trees."""
+        return all(s.trees == self.solutions[0].trees for s in self.solutions)
+
+    def active_solution(self, t: float) -> "RoutingSolution":
+        """The routing in force at time ``t`` (piecewise-constant)."""
+        k = 0
+        for seg, start in enumerate(self.boundaries):
+            if start <= t:
+                k = seg
+        return self.solutions[k]
+
+
+def _phase_segments(scenario) -> list[tuple[float, object]]:
+    """(start, scale) per routing segment from a scenario's capacity
+    phases: segment 0 covers t=0 under the latest phase with start ≤ 0
+    (base scale 1.0 if none); every later phase start opens a segment.
+    Consecutive segments with identical scales are merged."""
+    by_start: dict[float, object] = {0.0: 1.0}
+    for ph in sorted(scenario.capacity_phases, key=lambda p: p.start):
+        # Duplicate starts: the last phase in sorted order wins, matching
+        # the simulator's event loop (it applies every phase with
+        # start <= t in order, so the final one sticks).
+        by_start[max(float(ph.start), 0.0)] = ph.scale
+    segs = sorted(by_start.items())
+    merged = [segs[0]]
+    for start, scale in segs[1:]:
+        if _scale_key(scale) != _scale_key(merged[-1][1]):
+            merged.append((start, scale))
+    return merged
+
+
+def _scale_key(scale) -> object:
+    """Hashable fingerprint of a CapacityPhase scale (for caching)."""
+    if isinstance(scale, Mapping):
+        return tuple(
+            sorted((tuple(e), float(f)) for e, f in scale.items())
+        )
+    return float(scale)
+
+
+def route_time_expanded(
+    demands: Sequence[MulticastDemand],
+    categories: Categories,
+    scenario,
+    kappa: float,
+    num_agents: int,
+    milp_var_budget: int = 40_000,
+    time_limit: float = 60.0,
+    seed: int = 0,
+    incidence: CategoryIncidence | None = None,
+    heuristic_rounds: int = 8,
+    routing_cache: "MutableMapping | None" = None,
+    cache_key=None,
+    base_solution: "RoutingSolution | None" = None,
+) -> PhasedRoutingSolution:
+    """Time-expanded routing: one ``route()`` per capacity phase.
+
+    The scenario's piecewise-constant ``capacity_phases`` partition time
+    into segments; each segment is routed against the phase-scaled
+    categories (``Categories.scaled``), so the schedule tracks where the
+    bottlenecks actually are in each phase instead of optimizing once
+    for capacities that stop being true at the first boundary. Segments
+    with equal scales share one solution, and ``routing_cache`` (with a
+    ``cache_key`` identifying the demand set, e.g. the activated-link
+    frozenset) memoizes per-(demands, scale) across calls — a design
+    sweep rarely re-routes. ``incidence`` is rescaled per phase
+    (``CategoryIncidence.rescaled``) rather than recompiled, and
+    ``base_solution`` (a static ``route()`` result the caller already
+    holds) is reused for unscaled segments instead of being re-solved.
+
+    Re-routing is guarded against pointless swaps: a segment only
+    abandons the previous segment's trees when the re-route is
+    *strictly* better in closed form under the new phase's categories.
+    Swapping restarts the branches on fresh overlay links from zero
+    (mid-flight data on abandoned links is lost), so a zero-predicted-
+    gain swap can only cost time.
+
+    On a trivial scenario (no capacity phases) this returns a single
+    segment that is bitwise-identical to static ``route()`` with the
+    same arguments. ``metadata['routed_segments']`` counts the segments
+    actually solved this call (vs. served from the cache).
+    """
+    t0 = time.perf_counter()
+    segs = _phase_segments(scenario)
+    solutions: list[RoutingSolution] = []
+    by_scale: dict = {}
+    routed = 0
+    for _, scale in segs:
+        key = _scale_key(scale)
+        seg_cats = categories.scaled(scale)
+        # The raw per-scale solution is what gets cached; the swap guard
+        # below is applied per call (its outcome depends on the previous
+        # segment, which differs between phase sequences).
+        sol = by_scale.get(key)
+        if sol is None and routing_cache is not None and cache_key is not None:
+            sol = routing_cache.get((cache_key, key))
+        if sol is None and base_solution is not None and seg_cats is categories:
+            # A caller that already solved the static routing (the base,
+            # unscaled categories) supplies it — segment 0 of a no-
+            # phase-at-t≤0 schedule would otherwise re-solve it bitwise.
+            sol = base_solution
+        if sol is None:
+            seg_inc = None
+            if incidence is not None:
+                seg_inc = (
+                    incidence if seg_cats is categories
+                    else incidence.rescaled(seg_cats)
+                )
+            sol = route(
+                demands, seg_cats, kappa, num_agents,
+                milp_var_budget=milp_var_budget, time_limit=time_limit,
+                seed=seed, incidence=seg_inc,
+                heuristic_rounds=heuristic_rounds,
+            )
+            routed += 1
+        by_scale[key] = sol
+        if routing_cache is not None and cache_key is not None:
+            routing_cache[(cache_key, key)] = sol
+        if solutions:
+            # Swap guard: keep the in-flight trees unless the re-route
+            # strictly improves the closed-form τ under this phase's
+            # capacities.
+            prev = solutions[-1]
+            if sol is not prev and (
+                sol.trees == prev.trees
+                or completion_time(prev.trees, seg_cats, kappa)
+                <= sol.completion_time
+            ):
+                sol = prev
+        solutions.append(sol)
+    return PhasedRoutingSolution(
+        demands=tuple(demands),
+        boundaries=tuple(start for start, _ in segs),
+        solutions=tuple(solutions),
+        completion_time=solutions[0].completion_time,
+        method="time_expanded",
+        solve_seconds=time.perf_counter() - t0,
+        metadata={
+            "segment_times": tuple(s.completion_time for s in solutions),
+            "segment_methods": tuple(s.method for s in solutions),
+            "routed_segments": routed,
+        },
+    )

@@ -52,10 +52,12 @@ class SimResult:
     ``makespan`` is the completion time of the slowest *finished* branch
     (churn-cancelled branches are excluded — they represent exchanges the
     surviving agents renormalize away, not time spent waiting).
-    ``flow_completion[h]`` is NaN when flow h still had unfinished
-    branches at loop exit (``max_events`` truncation) — check
-    ``unfinished_branches`` before trusting a run that may have been cut
-    short.
+    ``flow_completion[h]`` is NaN when flow h cannot report a completion
+    time: it still had unfinished branches at loop exit (``max_events``
+    truncation — check ``unfinished_branches`` before trusting a run
+    that may have been cut short), or *all* of its branches were
+    churn-cancelled (nothing was delivered; a finite time always means
+    the surviving branches actually finished).
     """
 
     makespan: float
@@ -576,6 +578,16 @@ def _phase_capacity_array(
     return inc.base_capacity * float(phase.scale)
 
 
+def _branch_keys(inc: BranchIncidence) -> list[tuple[int, int, int]]:
+    """(flow, overlay i, overlay j) identity per branch — stable across
+    re-routed incidences, so a phase swap can carry each branch's
+    remaining volume to the same branch in the next segment's trees."""
+    return [
+        (h, i, j)
+        for h, (i, j) in zip(inc.flows.tolist(), inc.links.tolist())
+    ]
+
+
 def _simulate_vectorized(
     sol: RoutingSolution,
     overlay: OverlayNetwork,
@@ -584,17 +596,28 @@ def _simulate_vectorized(
     max_events: int,
     scenario: Scenario | None,
     batched: bool = False,
+    segments: Sequence[tuple[float, RoutingSolution, BranchIncidence]]
+    | None = None,
 ) -> SimResult:
-    n = inc.num_branches
+    """Event loop, optionally swapping the active ``BranchIncidence``.
+
+    ``segments`` (from ``simulate_phased``) lists ``(start, solution,
+    incidence)`` per routing segment, first entry starting at 0.0. At a
+    boundary the loop folds per-branch state out by (flow, overlay-link)
+    key and back into the next segment's branch order: a branch whose
+    link survives the re-route keeps its remaining volume (and its
+    finish time once done), a branch on a fresh link starts with the
+    flow's full κ, and branches of already-complete flows or departed
+    agents never reactivate — so the phased makespan is exact under the
+    same fluid model. Without ``segments`` this is the single-incidence
+    loop unchanged.
+    """
+    if segments is None:
+        segments = ((0.0, sol, inc),)
+    n_seg = len(segments)
+    H = len(sol.demands)
     # float64 explicitly (see _simulate_reference).
-    sizes = np.array(
-        [sol.demands[h].size for h in inc.flows], dtype=np.float64
-    )
-    remaining = sizes.copy()
-    thresh = 1e-9 * sizes
-    done_time = np.full(n, np.nan)
-    active = np.ones(n, dtype=bool)
-    cancelled = np.zeros(n, dtype=bool)
+    flow_size = np.array([d.size for d in sol.demands], dtype=np.float64)
     if fairness == "maxmin":
         alloc = _maxmin_rates_batched if batched else _maxmin_rates_vec
     else:
@@ -612,27 +635,19 @@ def _simulate_vectorized(
         phases = tuple(
             sorted(scenario.capacity_phases, key=lambda p: p.start)
         )
-        # One effective-capacity array per phase, built once up front
-        # (a per-edge Mapping scale would otherwise cost an O(E) Python
-        # loop on every event).
-        phase_caps = [_phase_capacity_array(inc, ph) for ph in phases]
         churn = sorted(scenario.churn, key=lambda c: c.time)
         breakpoints = scenario.breakpoints()
-        flow_source = np.array(
-            [d.source for d in sol.demands], dtype=np.int64
-        )
-        # Cross-traffic paths resolved to indexed edges once.
-        cross: list[tuple[CrossTraffic, np.ndarray]] = []
-        for ct in scenario.cross_traffic:
-            path = overlay.underlay.shortest_path(ct.src, ct.dst)
-            idxs = [
-                inc.edge_index[e]
-                for k in range(len(path) - 1)
-                if (e := (path[k], path[k + 1])) in inc.edge_index
-            ]
-            cross.append((ct, np.asarray(idxs, dtype=np.int64)))
     else:
-        phases, phase_caps, churn, breakpoints, cross = (), [], [], (), []
+        phases, churn, breakpoints = (), [], ()
+    flow_source = np.array([d.source for d in sol.demands], dtype=np.int64)
+
+    # Cross-segment state, keyed by branch identity (phased runs only).
+    remaining_map: dict[tuple[int, int, int], float] = {}
+    done_map: dict[tuple[int, int, int], float] = {}
+    cancelled_keys: set[tuple[int, int, int]] = set()
+    flow_done = np.full(H, np.nan)  # completion time once a flow finishes
+    departed: list[int] = []  # churned agents already applied
+    scen_prep: dict[int, tuple] = {}  # per-incidence scenario arrays
 
     t = 0.0
     events = 0
@@ -640,93 +655,235 @@ def _simulate_vectorized(
     bp_ptr = 0
     phase_ptr = 0
     cur_phase = -1  # latest phase with start <= t (t is monotone)
-    # Active-branch crossings per edge, maintained incrementally as
-    # branches finish or churn away (one bincount for the whole run).
-    counts = inc.edge_counts(active)
 
-    def drop_counts(gone: np.ndarray) -> None:
-        idx = np.flatnonzero(gone)
-        if idx.size:
-            np.subtract.at(counts, _branch_entries(inc, idx), 1.0)
-
-    while active.any() and events < max_events:
-        # Apply departures due by now: cancel branches on overlay links
-        # touching the agent and all branches of flows it sources.
-        while churn_ptr < len(churn) and churn[churn_ptr].time <= t:
-            agent = churn[churn_ptr].agent
-            hit = active & (
-                (inc.links[:, 0] == agent)
-                | (inc.links[:, 1] == agent)
-                | (flow_source[inc.flows] == agent)
-            )
-            cancelled |= hit
-            active &= ~hit
-            drop_counts(hit)
-            churn_ptr += 1
-        if not active.any():
-            break
-
-        if scenario is None:
-            caps = inc.base_capacity
+    for si in range(n_seg):
+        seg_start, seg_sol, seg_inc = segments[si]
+        seg_end = segments[si + 1][0] if si + 1 < n_seg else math.inf
+        # If the previous segment drained (or churned) empty before its
+        # end, nothing happens until this segment's re-route takes
+        # effect — its fresh branches start transmitting at seg_start.
+        if t < seg_start:
+            t = seg_start
+        n = seg_inc.num_branches
+        sizes = flow_size[seg_inc.flows]
+        thresh = 1e-9 * sizes
+        if si == 0:
+            remaining = sizes.copy()
+            done_time = np.full(n, np.nan)
+            cancelled = np.zeros(n, dtype=bool)
         else:
-            while phase_ptr < len(phases) and phases[phase_ptr].start <= t:
-                cur_phase = phase_ptr
-                phase_ptr += 1
-            caps = (
-                phase_caps[cur_phase] if cur_phase >= 0
-                else inc.base_capacity
+            # Fold carried state into this segment's branch order.
+            keys = _branch_keys(seg_inc)
+            remaining = np.array(
+                [remaining_map.get(k, s) for k, s in zip(keys, sizes)]
             )
-            if cross:
-                caps = caps.copy()
-                for ct, idxs in cross:
-                    if ct.start <= t < ct.stop and idxs.size:
-                        caps[idxs] -= ct.rate
-                np.maximum(
-                    caps, scenario.floor_frac * inc.base_capacity, out=caps
+            done_time = np.array([done_map.get(k, np.nan) for k in keys])
+            cancelled = np.fromiter(
+                (k in cancelled_keys for k in keys), dtype=bool, count=n
+            )
+            # Already-complete flows carry no fresh work into new links.
+            fresh = np.isnan(done_time) & ~cancelled
+            fd = flow_done[seg_inc.flows]
+            settle = fresh & ~np.isnan(fd)
+            done_time[settle] = fd[settle]
+            # Agents that already left cancel their fresh branches too.
+            for agent in departed:
+                hit = np.isnan(done_time) & ~cancelled & (
+                    (seg_inc.links[:, 0] == agent)
+                    | (seg_inc.links[:, 1] == agent)
+                    | (flow_source[seg_inc.flows] == agent)
                 )
+                cancelled |= hit
+        active = np.isnan(done_time) & ~cancelled
+        # Active-branch crossings per edge, maintained incrementally as
+        # branches finish or churn away (one bincount per segment).
+        counts = seg_inc.edge_counts(active)
 
-        rates = alloc(active, inc, caps, counts)
-        if scenario is not None and scenario.stragglers:
-            factor = np.ones(n)
-            for ev in scenario.stragglers:
-                if ev.start <= t < ev.stop:
-                    hit = (inc.links[:, 0] == ev.agent) | (
-                        inc.links[:, 1] == ev.agent
+        if scenario is not None:
+            cached = scen_prep.get(id(seg_inc))
+            if cached is None:
+                # One effective-capacity array per phase, built once per
+                # distinct incidence (the swap guard makes segments
+                # sharing one incidence the common case; a per-edge
+                # Mapping scale would otherwise cost an O(E) Python
+                # loop per segment).
+                phase_caps = [
+                    _phase_capacity_array(seg_inc, ph) for ph in phases
+                ]
+                # Cross-traffic paths resolved to indexed edges once.
+                cross: list[tuple[CrossTraffic, np.ndarray]] = []
+                for ct in scenario.cross_traffic:
+                    path = overlay.underlay.shortest_path(ct.src, ct.dst)
+                    idxs = [
+                        seg_inc.edge_index[e]
+                        for k in range(len(path) - 1)
+                        if (e := (path[k], path[k + 1]))
+                        in seg_inc.edge_index
+                    ]
+                    cross.append((ct, np.asarray(idxs, dtype=np.int64)))
+                scen_prep[id(seg_inc)] = (phase_caps, cross)
+            else:
+                phase_caps, cross = cached
+        else:
+            phase_caps, cross = [], []
+
+        def drop_counts(
+            gone: np.ndarray, inc=seg_inc, counts=counts
+        ) -> None:
+            idx = np.flatnonzero(gone)
+            if idx.size:
+                np.subtract.at(counts, _branch_entries(inc, idx), 1.0)
+
+        while active.any() and events < max_events and t < seg_end:
+            # Apply departures due by now: cancel branches on overlay
+            # links touching the agent and all branches of flows it
+            # sources.
+            while churn_ptr < len(churn) and churn[churn_ptr].time <= t:
+                agent = churn[churn_ptr].agent
+                departed.append(agent)
+                hit = active & (
+                    (seg_inc.links[:, 0] == agent)
+                    | (seg_inc.links[:, 1] == agent)
+                    | (flow_source[seg_inc.flows] == agent)
+                )
+                cancelled |= hit
+                active &= ~hit
+                drop_counts(hit)
+                churn_ptr += 1
+            if not active.any():
+                break
+
+            if scenario is None:
+                caps = seg_inc.base_capacity
+            else:
+                while (
+                    phase_ptr < len(phases)
+                    and phases[phase_ptr].start <= t
+                ):
+                    cur_phase = phase_ptr
+                    phase_ptr += 1
+                caps = (
+                    phase_caps[cur_phase] if cur_phase >= 0
+                    else seg_inc.base_capacity
+                )
+                if cross:
+                    caps = caps.copy()
+                    for ct, idxs in cross:
+                        if ct.start <= t < ct.stop and idxs.size:
+                            caps[idxs] -= ct.rate
+                    np.maximum(
+                        caps, scenario.floor_frac * seg_inc.base_capacity,
+                        out=caps,
                     )
-                    np.maximum(factor, np.where(hit, ev.slowdown, 1.0),
-                               out=factor)
-            rates = rates / factor
 
-        while bp_ptr < len(breakpoints) and breakpoints[bp_ptr] <= t:
-            bp_ptr += 1
-        t_next = breakpoints[bp_ptr] if bp_ptr < len(breakpoints) else math.inf
+            rates = alloc(active, seg_inc, caps, counts)
+            if scenario is not None and scenario.stragglers:
+                factor = np.ones(n)
+                for ev in scenario.stragglers:
+                    if ev.start <= t < ev.stop:
+                        hit = (seg_inc.links[:, 0] == ev.agent) | (
+                            seg_inc.links[:, 1] == ev.agent
+                        )
+                        np.maximum(
+                            factor, np.where(hit, ev.slowdown, 1.0),
+                            out=factor,
+                        )
+                rates = rates / factor
 
-        if not np.any(rates > 0):
-            if math.isinf(t_next):
-                raise RuntimeError(
-                    "starved branches; invalid routing/capacities"
-                )
-            t = t_next  # conditions may recover at the next breakpoint
+            while bp_ptr < len(breakpoints) and breakpoints[bp_ptr] <= t:
+                bp_ptr += 1
+            t_next = (
+                breakpoints[bp_ptr] if bp_ptr < len(breakpoints)
+                else math.inf
+            )
+            if seg_end < t_next:
+                t_next = seg_end  # re-route boundary acts as an event
+
+            if not np.any(rates > 0):
+                if math.isinf(t_next):
+                    raise RuntimeError(
+                        "starved branches; invalid routing/capacities"
+                    )
+                t = t_next  # conditions may recover at the next breakpoint
+                events += 1
+                continue
+
+            dt = np.min(
+                remaining[active] / np.maximum(rates[active], 1e-300)
+            )
+            if t_next - t < dt:
+                dt = t_next - t
+                t = t_next  # land exactly on the breakpoint (no fp drift)
+            else:
+                t += dt
+            remaining[active] -= rates[active] * dt
+            finished = active & (remaining <= thresh)
+            done_time[finished] = t
+            active &= ~finished
+            drop_counts(finished)
             events += 1
-            continue
 
-        dt = np.min(remaining[active] / np.maximum(rates[active], 1e-300))
-        if t_next - t < dt:
-            dt = t_next - t
-            t = t_next  # land exactly on the breakpoint (no fp drift)
-        else:
-            t += dt
-        remaining[active] -= rates[active] * dt
-        finished = active & (remaining <= thresh)
-        done_time[finished] = t
-        active &= ~finished
-        drop_counts(finished)
-        events += 1
+        if n_seg > 1:
+            # Fold this segment's state out by branch key. The map is
+            # rebuilt from scratch: a key absent from this segment's
+            # trees was abandoned by the re-route, and its partial
+            # progress is lost for good — a later segment restoring the
+            # link restarts it from full κ ("mid-flight data on
+            # abandoned links is lost", not parked).
+            keys = _branch_keys(seg_inc)
+            remaining_map = {}
+            for b, k in enumerate(keys):
+                if cancelled[b]:
+                    cancelled_keys.add(k)
+                elif not np.isnan(done_time[b]):
+                    done_map[k] = float(done_time[b])
+                else:
+                    remaining_map[k] = float(remaining[b])
+            seg_flows = seg_inc.flows
+            for h in range(H):
+                if np.isnan(flow_done[h]):
+                    selm = seg_flows == h
+                    if selm.any() and not (active & selm).any():
+                        vals = done_time[selm & ~cancelled]
+                        if vals.size and not np.isnan(vals).any():
+                            flow_done[h] = float(np.max(vals))
+        if events >= max_events or (n_seg == 1 and not active.any()):
+            break
+        # Multi-segment runs fall through even when this segment's
+        # active set churned/drained empty: a later re-route can add
+        # fresh branches (links avoiding the departed agents) that still
+        # deliver for unfinished flows.
 
-    return _collect_result(
-        sol, inc.flows, done_time, cancelled, events,
+    result = _collect_result(
+        sol, seg_inc.flows, done_time, cancelled, events,
         unfinished=int(active.sum()),
     )
+    if n_seg > 1:
+        # Union accounting across segments: a key cancelled in any
+        # segment counts once, and branches that finished before a
+        # later re-route dropped their link still count toward the
+        # makespan and their flow's completion time (their data WAS
+        # delivered; only the final segment's branches are visible to
+        # _collect_result). A flow keeps NaN only while it still has
+        # active branches (unfinished) or never finished any branch —
+        # NOT when churn cancelled its final-segment branches after an
+        # earlier segment already delivered some.
+        best: dict[int, float] = {}
+        for (h, _, _), t_done in done_map.items():  # ⊇ final-segment dones
+            if t_done > best.get(h, -math.inf):
+                best[h] = t_done
+        fc = list(result.flow_completion)
+        flows_final = seg_inc.flows
+        for h in range(H):
+            if h in best and not bool((active & (flows_final == h)).any()):
+                fc[h] = best[h]
+        result = dataclasses.replace(
+            result,
+            makespan=max([result.makespan, *done_map.values()]),
+            flow_completion=tuple(fc),
+            cancelled_branches=len(cancelled_keys),
+        )
+    return result
 
 
 def _collect_result(
@@ -737,13 +894,25 @@ def _collect_result(
     events: int,
     unfinished: int,
 ) -> SimResult:
+    """Fold per-branch finish times into a ``SimResult``.
+
+    ``flow_completion[h]`` is NaN when flow h cannot report a completion
+    time: either a branch was still unfinished at loop exit, or *every*
+    branch of the flow was churn-cancelled (the flow delivered nothing —
+    distinguishable from "finished instantly", which reports a finite
+    time).
+    """
     counted = done_time[~cancelled]
     finished_any = bool(np.any(~np.isnan(counted))) if counted.size else False
     flow_completion = []
     for h in range(len(sol.demands)):
         sel = (flows == h) & ~cancelled
         vals = done_time[sel]
-        flow_completion.append(float(np.max(vals)) if vals.size else 0.0)
+        # All branches cancelled -> NaN, not 0.0: "nothing delivered"
+        # must not read as "finished instantly".
+        flow_completion.append(
+            float(np.max(vals)) if vals.size else math.nan
+        )
     return SimResult(
         makespan=float(np.nanmax(counted)) if finished_any else 0.0,
         flow_completion=tuple(flow_completion),
@@ -799,6 +968,61 @@ def simulate(
     return _simulate_vectorized(
         sol, overlay, inc, fairness, max_events, scenario,
         batched=(engine == "batched"),
+    )
+
+
+def simulate_phased(
+    phased,
+    overlay: OverlayNetwork,
+    fairness: str = "maxmin",
+    max_events: int = 100_000,
+    scenario: Scenario | None = None,
+    engine: str = "vectorized",
+) -> SimResult:
+    """Simulate a ``PhasedRoutingSolution`` (time-expanded routing).
+
+    Each segment's trees are compiled to a ``BranchIncidence`` (one per
+    distinct tree set — segments sharing a solution share the compiled
+    incidence), and the vectorized event loop swaps the active incidence
+    at each boundary, carrying every branch's remaining volume across
+    the swap by (flow, overlay-link) identity. ``scenario`` supplies the
+    capacity phases/cross-traffic/stragglers/churn exactly as in
+    ``simulate`` — pass the same scenario the schedule was routed for.
+    A single-segment schedule reduces to ``simulate(phased.solutions[0],
+    ...)``; one whose segments share a tree matches the single-incidence
+    makespan (property-tested at rtol=1e-9). Engines: "vectorized" or
+    "batched" (the reference engine has no incidence to swap).
+    """
+    if fairness not in ("maxmin", "equal"):
+        raise ValueError(f"unknown fairness {fairness!r}")
+    if engine not in ("vectorized", "batched"):
+        raise ValueError(
+            "phased simulation requires a vectorized engine "
+            "('vectorized' or 'batched')"
+        )
+    for sol in phased.solutions:
+        for h, (demand, tree) in enumerate(zip(sol.demands, sol.trees)):
+            if not tree:
+                raise ValueError(
+                    f"demand {h} (source {demand.source}) has an empty "
+                    "routing tree; route it before simulating"
+                )
+    base = phased.solutions[0]
+    if not base.demands:
+        return SimResult(0.0, (), 0)
+    if scenario is not None and scenario.is_trivial:
+        scenario = None
+    compiled: dict[tuple, BranchIncidence] = {}
+    segments = []
+    for start, sol in zip(phased.boundaries, phased.solutions):
+        inc = compiled.get(sol.trees)
+        if inc is None:
+            inc = compile_incidence(sol, overlay)
+            compiled[sol.trees] = inc
+        segments.append((start, sol, inc))
+    return _simulate_vectorized(
+        base, overlay, segments[0][2], fairness, max_events, scenario,
+        batched=(engine == "batched"), segments=tuple(segments),
     )
 
 

@@ -101,14 +101,30 @@ def failure_scenario(
     )
 
 
-def shrink_state(state: Any, alive: tuple[int, ...]) -> Any:
-    """Drop failed agents' rows from a stacked-agent state pytree."""
+def shrink_state(
+    state: Any, alive: tuple[int, ...], num_agents: int
+) -> Any:
+    """Drop failed agents' rows from a stacked-agent state pytree.
+
+    ``num_agents`` is the CURRENT stacked-agent count: only leaves whose
+    leading dimension equals it are sliced. (The previous
+    ``x.shape[0] > max(alive)`` heuristic sliced *any* leaf with a large
+    enough leading dim — corrupting non-agent leaves such as a
+    replicated RNG key of shape [2] or global scalars lifted to 1-D.)
+    """
     import jax
 
     idx = np.asarray(alive)
+    if idx.size and (idx.min() < 0 or idx.max() >= num_agents):
+        raise ValueError(
+            f"alive indices {alive} out of range for num_agents="
+            f"{num_agents}"
+        )
 
     def take(x):
-        return x[idx] if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] > max(idx) else x
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == num_agents:
+            return x[idx]
+        return x
 
     return jax.tree.map(take, state)
 
@@ -160,35 +176,137 @@ class RecoveryEvent:
     survivors: tuple[int, ...]
     new_rho: float
     redesign_seconds: float
+    # Transition-round pricing: the fluid-simulated makespan of the
+    # in-flight round under a failure_scenario for the detected
+    # failures, and how many unicast exchanges the departures cancelled.
+    # NaN/0 when transition pricing is disabled. ``pricing_seconds``
+    # times the pricing itself, kept separate so ``redesign_seconds``
+    # stays a pure redesign-cost metric.
+    transition_tau: float = float("nan")
+    cancelled_exchanges: int = 0
+    pricing_seconds: float = 0.0
 
 
 class FaultToleranceController:
-    """Orchestrates detect → redesign → shrink for a stacked trainer."""
+    """Orchestrates detect → price → redesign → shrink for a stacked
+    trainer.
 
-    def __init__(self, overlay: OverlayNetwork, kappa: float):
+    Besides redesigning the mixing matrix for the survivors, the
+    controller prices the *transition* round: the round in flight when
+    the failure hits is simulated under ``failure_scenario`` (departures
+    cancel the affected exchanges mid-round), and the resulting makespan
+    and cancelled-exchange count land in the ``RecoveryEvent`` — the
+    recovery cost, not just the recovery outcome. Disable with
+    ``price_transitions=False`` (e.g. when the controller is driven at
+    very high frequency and the extra routing+simulation per failure
+    matters).
+    """
+
+    def __init__(
+        self,
+        overlay: OverlayNetwork,
+        kappa: float,
+        price_transitions: bool = True,
+        transition_routing_rounds: int = 2,
+    ):
         self.overlay = overlay
         self.kappa = kappa
         self.alive = tuple(range(overlay.num_agents))
         self.events: list[RecoveryEvent] = []
+        self.price_transitions = price_transitions
+        self._routing_rounds = transition_routing_rounds
+        self._cur_overlay = overlay
+        self._cur_routing = None  # lazily routed per membership epoch
+
+    def _round_routing(self):
+        """Routing of the round in flight for the current membership."""
+        from repro.net.demands import demands_from_links
+        from repro.net.routing import route
+
+        if self._cur_routing is None:
+            m = self._cur_overlay.num_agents
+            if m < 2:
+                return None
+            cats = compute_categories(self._cur_overlay)
+            design = fmmd_wp(m, max(2 * m, 4), cats, self.kappa)
+            demands = demands_from_links(
+                design.activated_links, self.kappa, m
+            )
+            if demands:
+                # Heuristic-only (milp_var_budget=0): the transition
+                # price must stay cheap next to the redesign itself.
+                self._cur_routing = route(
+                    demands, cats, self.kappa, m, milp_var_budget=0,
+                    heuristic_rounds=self._routing_rounds,
+                )
+        return self._cur_routing
+
+    def _price_transition(
+        self,
+        failed: tuple[int, ...],
+        failure_times: Mapping[int, float] | None,
+    ) -> tuple[float, int]:
+        from repro.net.simulator import simulate
+
+        routing = self._round_routing()
+        if routing is None or not routing.demands:
+            return float("nan"), 0
+        # Agents are re-indexed after each redesign: churn events must
+        # address positions within the current membership.
+        pos = {a: i for i, a in enumerate(self.alive)}
+        tau0 = routing.completion_time
+        failures = {
+            pos[a]: max(float((failure_times or {}).get(a, 0.5 * tau0)),
+                        1e-9)
+            for a in failed if a in pos
+        }
+        if not failures:
+            return float("nan"), 0
+        sim = simulate(
+            routing, self._cur_overlay,
+            scenario=failure_scenario(failures),
+        )
+        return float(sim.makespan), int(sim.cancelled_branches)
 
     def handle_failures(
-        self, failed: tuple[int, ...], state: Any, step: int
+        self,
+        failed: tuple[int, ...],
+        state: Any,
+        step: int,
+        failure_times: Mapping[int, float] | None = None,
     ) -> tuple[Any, np.ndarray, GossipSchedule]:
+        """Price the interrupted round, redesign, and shrink the state.
+
+        ``failure_times`` (original agent index → seconds into the
+        in-flight round) refines the transition pricing; failures
+        default to the middle of the round.
+        """
         from repro.core import mixing as mixing_lib
 
-        t0 = time.perf_counter()
         survivors = tuple(a for a in self.alive if a not in failed)
         if not survivors:
             raise RuntimeError("all agents failed")
+        t_price = time.perf_counter()
+        transition_tau, cancelled = (
+            self._price_transition(tuple(failed), failure_times)
+            if self.price_transitions else (float("nan"), 0)
+        )
+        t0 = time.perf_counter()  # redesign timing excludes the pricing
+        pricing_seconds = t0 - t_price
         # state rows are indexed by position within current alive set
         keep_pos = tuple(
             i for i, a in enumerate(self.alive) if a not in failed
         )
-        new_state = shrink_state(state, keep_pos)
+        new_state = shrink_state(state, keep_pos, len(self.alive))
         w, schedule, _ = redesign_after_failure(
             self.overlay, survivors, self.kappa
         )
         self.alive = survivors
+        self._cur_overlay = build_overlay(
+            self.overlay.underlay,
+            [self.overlay.agents[a] for a in survivors],
+        )
+        self._cur_routing = None  # next failure re-routes the new epoch
         self.events.append(
             RecoveryEvent(
                 step=step,
@@ -196,6 +314,9 @@ class FaultToleranceController:
                 survivors=survivors,
                 new_rho=mixing_lib.rho(w) if w.shape[0] > 1 else 0.0,
                 redesign_seconds=time.perf_counter() - t0,
+                transition_tau=transition_tau,
+                cancelled_exchanges=cancelled,
+                pricing_seconds=pricing_seconds,
             )
         )
         return new_state, w, schedule

@@ -53,6 +53,54 @@ def test_grow_state_clones():
     np.testing.assert_allclose(g["x"][3], g["x"][0])
 
 
+def test_shrink_state_spares_non_agent_leaves():
+    """Regression: only leaves whose leading dim equals the CURRENT agent
+    count are sliced. The old ``shape[0] > max(alive)`` heuristic would
+    corrupt a replicated RNG key of shape [2] (2 > max index 1) and any
+    global vector longer than the largest alive index."""
+    state = {
+        "params": jnp.arange(8.0).reshape(4, 2),  # stacked agent axis
+        "rng": jnp.array([7, 11], dtype=jnp.uint32),  # replicated key
+        "sched": jnp.arange(100.0),  # global 1-D schedule table
+        "scalar": jnp.float32(3.0),
+    }
+    out = shrink_state(state, (0, 1), num_agents=4)
+    assert out["params"].shape == (2, 2)
+    np.testing.assert_array_equal(out["rng"], state["rng"])  # untouched
+    assert out["sched"].shape == (100,)
+    assert out["scalar"].shape == ()
+
+    with pytest.raises(ValueError, match="out of range"):
+        shrink_state(state, (0, 5), num_agents=4)
+
+
+def test_controller_prices_transition_round(roofnet_overlay):
+    """Regression: handle_failures simulates the in-flight round under a
+    failure_scenario and records the transition τ and cancelled-exchange
+    count in the RecoveryEvent (the ROADMAP gap: redesign happened but
+    the recovery cost was never measured)."""
+    ctl = FaultToleranceController(roofnet_overlay, kappa=1e6)
+    state = {"x": jnp.arange(10.0)[:, None]}
+    _, _, _ = ctl.handle_failures((3,), state, step=5)
+    ev = ctl.events[-1]
+    assert np.isfinite(ev.transition_tau) and ev.transition_tau > 0
+    assert ev.cancelled_exchanges > 0
+    # Explicit failure times refine the pricing: failing at t=0 cancels
+    # everything the agent touches before any of it completes.
+    ctl2 = FaultToleranceController(roofnet_overlay, kappa=1e6)
+    _, _, _ = ctl2.handle_failures(
+        (3,), state, step=5, failure_times={3: 1e-6}
+    )
+    assert ctl2.events[-1].cancelled_exchanges >= ev.cancelled_exchanges
+
+    ctl3 = FaultToleranceController(
+        roofnet_overlay, kappa=1e6, price_transitions=False
+    )
+    _, _, _ = ctl3.handle_failures((3,), state, step=5)
+    assert np.isnan(ctl3.events[-1].transition_tau)
+    assert ctl3.events[-1].cancelled_exchanges == 0
+
+
 @given(seed=st.integers(0, 200), m=st.integers(3, 8))
 @settings(max_examples=25, deadline=None)
 def test_renormalized_mixing_stays_valid(seed, m):

@@ -1,0 +1,438 @@
+"""Phase-adaptive (time-expanded) routing: degeneracy, per-phase
+categories, phased-simulation parity, and the designer wiring."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.net import (
+    CapacityPhase,
+    ChurnEvent,
+    Scenario,
+    build_overlay,
+    compute_categories,
+    compile_category_incidence,
+    demands_from_links,
+    infer_categories,
+    random_geometric_underlay,
+    route,
+    route_time_expanded,
+    simulate,
+    simulate_phased,
+)
+from repro.net.routing import PhasedRoutingSolution, _phase_segments
+
+
+def _instance(seed: int, m: int):
+    u = random_geometric_underlay(12, radius=0.5, seed=seed)
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.6
+    ] or [(0, 1)]
+    demands = demands_from_links(links, 1e6, m)
+    return u, ov, cats, demands
+
+
+# ---------------------------------------------------------------------------
+# Degeneracy: trivial scenario == static route(), bitwise
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40), m=st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_trivial_scenario_is_static_route_bitwise(seed, m):
+    """Property: with no capacity phases, route_time_expanded returns
+    exactly the static route() answer (same trees, same τ)."""
+    _, _, cats, demands = _instance(seed, m)
+    static = route(demands, cats, 1e6, m, milp_var_budget=0, seed=seed)
+    phased = route_time_expanded(
+        demands, cats, Scenario(), 1e6, m, milp_var_budget=0, seed=seed
+    )
+    assert phased.num_segments == 1
+    assert phased.boundaries == (0.0,)
+    assert phased.solutions[0].trees == static.trees
+    assert phased.solutions[0].completion_time == static.completion_time
+    assert phased.is_static
+
+
+# ---------------------------------------------------------------------------
+# Per-phase categories == compute_categories on the phase-scaled underlay
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 30),
+    m=st.integers(3, 6),
+    scalar=st.booleans(),
+)
+@settings(max_examples=10, deadline=None)
+def test_scaled_categories_match_scaled_underlay(seed, m, scalar):
+    """Property: Categories.scaled(phase.scale) equals compute_categories
+    on the same overlay atop the phase-scaled underlay — for scalar and
+    per-edge scales (capacity scaling never re-routes paths)."""
+    u, ov, cats, _ = _instance(seed, m)
+    if scalar:
+        scale = 0.25 + 0.5 * np.random.default_rng(seed).random()
+    else:
+        rng = np.random.default_rng(seed + 1)
+        edges = list(u.graph.edges)
+        picks = rng.choice(len(edges), size=min(8, len(edges)),
+                           replace=False)
+        scale = {edges[int(k)]: float(rng.uniform(0.05, 2.0))
+                 for k in picks}
+    scaled = cats.scaled(scale)
+    truth = compute_categories(
+        dataclasses.replace(ov, underlay=u.with_scaled_capacities(scale))
+    )
+    assert set(scaled.capacity) == set(truth.capacity)
+    for F in truth.capacity:
+        assert scaled.capacity[F] == truth.capacity[F]
+
+
+def test_scaled_identity_and_rejections():
+    _, _, cats, _ = _instance(0, 4)
+    assert cats.scaled(1.0) is cats  # object identity on trivial phase
+    with pytest.raises(ValueError, match="positive"):
+        cats.scaled(0.0)
+    inferred = infer_categories(
+        build_overlay(
+            random_geometric_underlay(12, radius=0.5, seed=0),
+            list(range(4)),
+        )
+    )
+    assert inferred.scaled(0.5).capacity  # scalar works without members
+    with pytest.raises(ValueError, match="inferred"):
+        inferred.scaled({(0, 1): 0.5})
+
+
+def test_rescaled_incidence_matches_recompiled():
+    _, _, cats, _ = _instance(3, 5)
+    inc = compile_category_incidence(cats, 5, 1e6)
+    scaled = cats.scaled(0.5)
+    fast = inc.rescaled(scaled)
+    slow = compile_category_incidence(scaled, 5, 1e6)
+    assert np.array_equal(fast.capacity, slow.capacity)
+    assert np.array_equal(fast.entry_coef, slow.entry_coef)
+    assert np.array_equal(fast.entry_link, slow.entry_link)
+    assert fast.matches(scaled)
+
+
+def test_duplicate_phase_starts_accepted():
+    """Regression: two phases sharing a start time are legal for
+    simulate() (the last sorted one wins), so route_time_expanded must
+    not crash on them — it keeps the winning phase per start."""
+    sc = Scenario(capacity_phases=(
+        CapacityPhase(start=5.0, scale=0.5),
+        CapacityPhase(start=5.0, scale=0.25),
+    ))
+    assert _phase_segments(sc) == [(0.0, 1.0), (5.0, 0.25)]
+    _, _, cats, demands = _instance(0, 4)
+    phased = route_time_expanded(
+        demands, cats, sc, 1e6, 4, milp_var_budget=0
+    )
+    assert phased.boundaries == (0.0, 5.0)
+
+
+def test_uniform_scale_never_swaps_trees():
+    """A uniform capacity drop moves no bottleneck: every segment must
+    keep segment 0's solution (trees-equal swap guard, including for
+    segments served from the per-scale cache)."""
+    _, _, cats, demands = _instance(2, 5)
+    sc = Scenario(capacity_phases=(
+        CapacityPhase(start=3.0, scale=0.5),
+        CapacityPhase(start=9.0, scale=1.0),
+    ))
+    phased = route_time_expanded(
+        demands, cats, sc, 1e6, 5, milp_var_budget=0, seed=2
+    )
+    assert phased.num_segments == 3
+    assert phased.is_static
+    assert phased.solutions[1] is phased.solutions[0]
+    assert phased.solutions[2] is phased.solutions[0]
+
+
+def test_abandoned_branch_progress_is_lost():
+    """Regression: a branch dropped by one re-route and restored by a
+    later one restarts from full κ — mid-flight data on abandoned links
+    is lost, not parked. Hand-computed on the 3-agent line."""
+    from repro.net import line_underlay
+    from repro.net.routing import RoutingSolution
+
+    u = line_underlay(3)  # C = 125 kB/s per edge
+    ov = build_overlay(u, [0, 1, 2])
+    demands = tuple(demands_from_links([(0, 1)], 1e6, 3))[:1]
+    direct = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 1)}),),
+        completion_time=8.0, method="direct", solve_seconds=0.0,
+    )
+    relay = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 2), (2, 1)}),),
+        completion_time=16.0, method="direct", solve_seconds=0.0,
+    )
+    phased = PhasedRoutingSolution(
+        demands=demands, boundaries=(0.0, 2.0, 4.0),
+        solutions=(direct, relay, direct),
+        completion_time=8.0, method="time_expanded", solve_seconds=0.0,
+    )
+    r = simulate_phased(phased, ov)
+    # [0,2): direct ships 250 kB. [2,4): relay branches restart at 1 MB
+    # and ship 250 kB each. [4,·): the direct branch was abandoned at
+    # t=2, so it restarts at the FULL 1 MB -> 8 s -> done at t=12 (a
+    # stale resume of its 750 kB leftover would finish at t=10).
+    assert r.makespan == pytest.approx(12.0)
+    assert r.flow_completion == (pytest.approx(12.0),)
+
+
+def test_earlier_delivery_survives_final_segment_churn():
+    """Regression: a flow whose final-segment branches are all
+    churn-cancelled still reports the finite completion time of the
+    branch it delivered in an earlier segment (NaN is reserved for
+    unfinished flows and flows that never delivered anything)."""
+    import networkx as nx
+
+    from repro.net import ChurnEvent, MulticastDemand, Scenario
+    from repro.net.routing import RoutingSolution
+    from repro.net.topology import Underlay
+
+    g = nx.Graph()
+    g.add_edge(0, 1, capacity=125_000.0)
+    g.add_edge(1, 2, capacity=62_500.0)
+    ov = build_overlay(Underlay(graph=g), [0, 1, 2])
+    demands = (MulticastDemand(0, frozenset({1, 2}), 1e6),)
+    # Segment 0: direct tree — branch (0,1) finishes at 8 s, branch
+    # (1,2) is still in flight at the t=10 boundary.
+    tree_a = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 1), (1, 2)}),),
+        completion_time=16.0, method="direct", solve_seconds=0.0,
+    )
+    # Segment 1: re-route drops the finished (0,1) branch entirely.
+    tree_b = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 2), (2, 1)}),),
+        completion_time=16.0, method="direct", solve_seconds=0.0,
+    )
+    phased = PhasedRoutingSolution(
+        demands=demands, boundaries=(0.0, 10.0),
+        solutions=(tree_a, tree_b),
+        completion_time=16.0, method="time_expanded", solve_seconds=0.0,
+    )
+    # Agent 0 churns at t=12: every final-segment branch of the flow is
+    # cancelled — but 1 already received the payload at t=8.
+    r = simulate_phased(
+        phased, ov,
+        scenario=Scenario(churn=(ChurnEvent(agent=0, time=12.0),)),
+    )
+    assert r.flow_completion == (pytest.approx(8.0),)
+    assert r.makespan == pytest.approx(8.0)
+    assert r.cancelled_branches == 2
+
+
+def test_later_segment_revives_churn_emptied_flow():
+    """Regression: when churn cancels every active branch mid-segment,
+    the phased loop must still enter later segments — a re-route can
+    avoid the departed relay and deliver for unfinished flows."""
+    from repro.net import ChurnEvent, MulticastDemand, Scenario, line_underlay
+    from repro.net.routing import RoutingSolution
+
+    u = line_underlay(3)  # C = 125 kB/s per edge
+    ov = build_overlay(u, [0, 1, 2])
+    demands = (MulticastDemand(0, frozenset({2}), 1e6),)
+    # Segment 0 relays through agent 1; agent 1 departs at t=2, which
+    # cancels both branches and empties the active set.
+    relay = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 1), (1, 2)}),),
+        completion_time=8.0, method="direct", solve_seconds=0.0,
+    )
+    # Segment 1 (t>=4) routes 0->2 on the direct overlay link, which
+    # touches no departed agent and must deliver.
+    direct = RoutingSolution(
+        demands=demands, trees=(frozenset({(0, 2)}),),
+        completion_time=8.0, method="direct", solve_seconds=0.0,
+    )
+    phased = PhasedRoutingSolution(
+        demands=demands, boundaries=(0.0, 4.0),
+        solutions=(relay, direct),
+        completion_time=8.0, method="time_expanded", solve_seconds=0.0,
+    )
+    r = simulate_phased(
+        phased, ov,
+        scenario=Scenario(churn=(ChurnEvent(agent=1, time=2.0),)),
+    )
+    # Fresh branch (0,2) starts at t=4 with the full 1 MB over the
+    # 2-hop path (bottleneck 125 kB/s) -> done at t=12.
+    assert r.flow_completion == (pytest.approx(12.0),)
+    assert r.makespan == pytest.approx(12.0)
+    assert r.cancelled_branches == 2
+    assert r.unfinished_branches == 0
+
+
+def test_base_solution_reused_for_unscaled_segments():
+    """Callers holding the static route() pass it as base_solution so
+    the unscaled segment is not re-solved bitwise-identically."""
+    _, _, cats, demands = _instance(1, 5)
+    static = route(demands, cats, 1e6, 5, milp_var_budget=0, seed=1)
+    sc = Scenario(capacity_phases=(CapacityPhase(start=4.0, scale=0.5),))
+    phased = route_time_expanded(
+        demands, cats, sc, 1e6, 5, milp_var_budget=0, seed=1,
+        base_solution=static,
+    )
+    assert phased.solutions[0] is static
+    assert phased.metadata["routed_segments"] <= 1
+
+
+def test_phase_segments_merge_and_order():
+    sc = Scenario(capacity_phases=(
+        CapacityPhase(start=8.0, scale=0.5),
+        CapacityPhase(start=2.0, scale=0.5),
+        CapacityPhase(start=0.0, scale=1.0),
+        CapacityPhase(start=12.0, scale=1.0),
+    ))
+    segs = _phase_segments(sc)
+    # start<=0 folds into segment 0; 2.0 and 8.0 share a scale and merge;
+    # 12.0 recovers to the base scale.
+    assert segs == [(0.0, 1.0), (2.0, 0.5), (12.0, 1.0)]
+
+
+def test_phased_solution_validation():
+    _, _, cats, demands = _instance(0, 4)
+    sol = route(demands, cats, 1e6, 4, milp_var_budget=0)
+    with pytest.raises(ValueError, match="start at t=0"):
+        PhasedRoutingSolution(
+            demands=tuple(demands), boundaries=(1.0,), solutions=(sol,),
+            completion_time=sol.completion_time, method="time_expanded",
+            solve_seconds=0.0,
+        )
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PhasedRoutingSolution(
+            demands=tuple(demands), boundaries=(0.0, 5.0, 5.0),
+            solutions=(sol, sol, sol),
+            completion_time=sol.completion_time, method="time_expanded",
+            solve_seconds=0.0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Phased simulation parity: shared-tree schedule == single incidence
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40), m=st.integers(3, 6), churn=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_shared_tree_phased_matches_single_incidence(seed, m, churn):
+    """Property: a phased solution whose segments all share one tree
+    reproduces the single-incidence simulation to rtol=1e-9 — boundary
+    swaps are pure bookkeeping when nothing changes."""
+    _, ov, cats, demands = _instance(seed, m)
+    sol = route(demands, cats, 1e6, m, milp_var_budget=0, seed=seed)
+    tau = sol.completion_time
+    events = [CapacityPhase(start=0.35 * tau, scale=0.5)]
+    sc = Scenario(
+        capacity_phases=tuple(events),
+        churn=(ChurnEvent(agent=0, time=0.2 * tau),) if churn else (),
+    )
+    # Boundaries deliberately off the capacity-phase breakpoints: the
+    # swap itself becomes an extra event, which must not move totals
+    # beyond fp tolerance.
+    phased = PhasedRoutingSolution(
+        demands=tuple(demands),
+        boundaries=(0.0, 0.27 * tau, 0.61 * tau),
+        solutions=(sol, sol, sol),
+        completion_time=tau,
+        method="time_expanded",
+        solve_seconds=0.0,
+    )
+    single = simulate(sol, ov, scenario=sc)
+    multi = simulate_phased(phased, ov, scenario=sc)
+    assert multi.makespan == pytest.approx(single.makespan, rel=1e-9)
+    assert multi.cancelled_branches == single.cancelled_branches
+    np.testing.assert_allclose(
+        np.asarray(multi.flow_completion),
+        np.asarray(single.flow_completion),
+        rtol=1e-9,
+    )
+
+
+def test_phased_never_loses_on_degraded_scenario():
+    """The benchmark gate in miniature: degrading the mid-path hops of
+    several ring links 20× mid-round, the phase-adaptive schedule's
+    simulated makespan is <= the static-optimal schedule's."""
+    u = random_geometric_underlay(25, radius=0.35, seed=2)
+    m = 6
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    links = sorted({(min(i, (i + 1) % m), max(i, (i + 1) % m))
+                    for i in range(m)})
+    demands = demands_from_links(links, 1e6, m)
+    static = route(demands, cats, 1e6, m, milp_var_budget=0, seed=0)
+    drop = {}
+    for (i, j) in links[:3]:
+        for e in ov.path_edges(i, j)[1:-1]:
+            drop[(min(e), max(e))] = 0.05
+    if not drop:
+        pytest.skip("degenerate instance: no mid-path hops to degrade")
+    sc = Scenario(capacity_phases=(
+        CapacityPhase(start=0.15 * static.completion_time, scale=drop),
+    ))
+    phased = route_time_expanded(
+        demands, cats, sc, 1e6, m, milp_var_budget=0, seed=0
+    )
+    s_static = simulate(static, ov, scenario=sc)
+    s_phased = simulate_phased(phased, ov, scenario=sc)
+    assert s_phased.makespan <= s_static.makespan + 1e-9
+
+
+def test_phased_cache_avoids_rerouting():
+    _, _, cats, demands = _instance(1, 5)
+    sc = Scenario(capacity_phases=(CapacityPhase(start=3.0, scale=0.5),))
+    cache: dict = {}
+    first = route_time_expanded(
+        demands, cats, sc, 1e6, 5, milp_var_budget=0,
+        routing_cache=cache, cache_key="k",
+    )
+    assert first.metadata["routed_segments"] == 2
+    again = route_time_expanded(
+        demands, cats, sc, 1e6, 5, milp_var_budget=0,
+        routing_cache=cache, cache_key="k",
+    )
+    assert again.metadata["routed_segments"] == 0
+    assert again.solutions == first.solutions
+
+
+# ---------------------------------------------------------------------------
+# Designer wiring
+# ---------------------------------------------------------------------------
+
+
+def test_designer_prices_both_schedules(roofnet_overlay, roofnet_categories):
+    from repro.core import ConvergenceConstants, design
+
+    ov = roofnet_overlay
+    drop = {}
+    for (i, j) in [(0, 1), (1, 2), (2, 3)]:
+        for e in ov.path_edges(i, j)[1:-1]:
+            drop[(min(e), max(e))] = 0.05
+    sc = Scenario(capacity_phases=(CapacityPhase(start=200.0, scale=drop),))
+    out = design(
+        "ring", roofnet_categories, 94.47e6, 10, overlay=ov, scenario=sc,
+        constants=ConvergenceConstants(epsilon=0.05),
+        milp_time_limit=5.0, reroute_per_phase=True,
+    )
+    assert out.phased_routing is not None and out.sim_phased is not None
+    assert np.isfinite(out.tau_static_sched)
+    assert np.isfinite(out.tau_phased)
+    assert out.tau == min(out.tau_static_sched, out.tau_phased)
+    assert out.total_time == out.tau * out.iterations_to_eps
+
+
+def test_designer_reroute_requires_routing_optimizer(roofnet_categories):
+    from repro.core import design
+
+    with pytest.raises(ValueError, match="optimize_routing"):
+        design(
+            "ring", roofnet_categories, 1e6, 10, optimize_routing=False,
+            reroute_per_phase=True,
+        )

@@ -197,6 +197,38 @@ def test_straggler_throttles_rate():
     assert r.makespan == pytest.approx(32.0)  # 4× the 8s static time
 
 
+def test_fully_cancelled_flow_reports_nan():
+    """Regression: a flow whose branches were ALL churn-cancelled must
+    report NaN, not 0.0 — "nothing delivered" must be distinguishable
+    from "finished instantly"."""
+    u = random_geometric_underlay(12, radius=0.5, seed=0)
+    ov = build_overlay(u, list(u.graph.nodes)[:3])
+    cats = compute_categories(ov)
+    sol = route_direct(demands_from_links([(0, 1), (1, 2)], 1e6, 3),
+                       cats, 1e6)
+    # Agent 0 departs mid-run: its sourced multicast (flow 0) loses every
+    # branch; flows 1 and 2 keep their surviving exchanges.
+    r = simulate(
+        sol, ov, scenario=Scenario(churn=(ChurnEvent(agent=0, time=0.5),))
+    )
+    assert np.isnan(r.flow_completion[0])
+    assert np.isfinite(r.flow_completion[1])
+    assert np.isfinite(r.flow_completion[2])
+    assert r.makespan > 0  # survivors still finished
+
+    # The designer's undelivered check keys off the NaN signal: a
+    # partially-churned round still prices at the survivors' makespan.
+    from repro.core.designer import evaluate_design
+    from repro.core.topology_baselines import ring_design
+
+    out = evaluate_design(
+        ring_design(3), cats, 1e6, 3, overlay=ov,
+        optimize_routing=False,
+        scenario=Scenario(churn=(ChurnEvent(agent=0, time=0.5),)),
+    )
+    assert np.isfinite(out.tau) and out.tau > 0
+
+
 def test_churn_cancels_branches():
     # Both agents multicast over the single link; agent 1 leaving kills
     # both directions (its own flow and the branch targeting it).

@@ -27,6 +27,7 @@ from repro.net import (
     compute_categories,
     demands_from_links,
     lowest_degree_nodes,
+    mid_path_edges,
     roofnet_like,
     route,
     route_time_expanded,
@@ -54,10 +55,10 @@ def degradation_scenario(ov, static, links=5):
     """Degrade the middle edges of the first ``links`` ring links'
     default paths — the hops a re-routed overlay can actually avoid
     (unlike agent access edges, which every schedule must cross)."""
-    drop = {}
-    for (i, j) in [(k, k + 1) for k in range(links)]:
-        for e in ov.path_edges(i, j)[1:-1]:
-            drop[(min(e), max(e))] = DEGRADATION
+    drop = {
+        e: DEGRADATION
+        for e in mid_path_edges(ov, [(k, k + 1) for k in range(links)])
+    }
     return Scenario(capacity_phases=(
         CapacityPhase(start=BREAK_FRAC * static.completion_time,
                       scale=drop),

@@ -131,9 +131,10 @@ def main() -> None:
     emit(
         "route_scale",
         1e6 * r["t_vectorized"],
-        f"speedup={r['speedup']:.1f}x;amortized_s={r['t_amortized']:.2f};"
-        f"sweep500_s={r['sweep_seconds']:.1f};"
-        f"sweep500_setup_s={r['sweep_setup_seconds']:.1f}",
+        f"speedup={r['speedup']:.1f}x;"
+        f"amortized_seconds={r['t_amortized']:.2f};"
+        f"sweep500_seconds={r['sweep_seconds']:.1f};"
+        f"sweep500_setup_seconds={r['sweep_setup_seconds']:.1f}",
     )
     assert r["speedup"] >= SPEEDUP_TARGET, (
         f"vectorized router only {r['speedup']:.1f}x faster "

@@ -9,6 +9,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        engine_parity,
         fig4_fmmd_variants,
         fig5_training,
         gossip_traffic,
@@ -17,6 +18,7 @@ def main() -> None:
         roofline_bench,
         route_scale,
         sim_scale,
+        stochastic_routing,
         table1_runtimes,
     )
 
@@ -30,6 +32,8 @@ def main() -> None:
         "sim_scale": sim_scale.main,
         "route_scale": route_scale.main,
         "phase_routing": phase_routing.main,
+        "stochastic_routing": stochastic_routing.main,
+        "engine_parity": engine_parity.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

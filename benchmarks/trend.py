@@ -1,0 +1,236 @@
+"""Benchmark trend gate: diff two ``bench-results.jsonl`` files.
+
+The nightly workflow uploads every benchmark record as a JSON line
+(``benchmarks/common.emit`` with ``$BENCH_JSON`` set):
+
+    {"name": ..., "us_per_call": ..., "derived": "k1=v1;k2=v2x;...",
+     "timestamp": ...}
+
+The ``trend`` job downloads the previous successful run's artifact and
+runs this script against the current run's file. It fails (exit 1) with
+a readable table when any *headline* metric regresses more than
+``--threshold`` (default 10%); wall-clock metrics — ``us_per_call``
+plus any derived key containing ``seconds`` or ``speedup`` (measured
+timings and ratios of timings; the naming convention the emitters
+follow) — are compared against the looser ``--time-threshold``
+(default 50%) because shared CI runners jitter far more than the
+machine-independent headline metrics (simulated makespans ``*_s``,
+win ratios of simulated values, counts, error magnitudes).
+
+Direction is inferred per metric: keys ending in ``x`` or containing
+``win``/``speedup``/``ratio`` are higher-is-better; everything else
+(timings, makespans, error magnitudes) is lower-is-better. Benchmarks
+present only in one file are reported but never fail the gate — a brand
+new benchmark has no baseline, and a removed one is a code change, not
+a regression. A missing baseline *file* (the very first run, or the
+previous run predates artifact upload) passes with a notice.
+
+Stdlib-only on purpose: the trend job runs without installing the repo.
+
+Usage:  python benchmarks/trend.py BASELINE.jsonl CURRENT.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import sys
+
+_HIGHER_HINTS = ("win", "speedup", "ratio")
+TIME_METRIC = "us_per_call"
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """One compared metric of one benchmark."""
+
+    bench: str
+    metric: str
+    baseline: float
+    current: float
+    higher_is_better: bool
+    threshold: float
+
+    @property
+    def change(self) -> float:
+        """Signed relative change, oriented so positive == better."""
+        if self.baseline == 0:
+            return 0.0
+        rel = (self.current - self.baseline) / abs(self.baseline)
+        return rel if self.higher_is_better else -rel
+
+    @property
+    def regressed(self) -> bool:
+        return self.change < -self.threshold
+
+
+def higher_is_better(key: str) -> bool:
+    return key.endswith("x") or any(h in key for h in _HIGHER_HINTS)
+
+
+def is_wallclock(key: str) -> bool:
+    """Measured-timing metrics (runner-jitter-prone): ``us_per_call``
+    and, by emitter naming convention, ``*seconds*`` timings and
+    ``*speedup*`` timing ratios. Simulated durations use the ``_s``
+    suffix instead and stay on the tight threshold."""
+    return (
+        key == TIME_METRIC or "seconds" in key or "speedup" in key
+    )
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """Numeric metrics out of the ``k1=v1;k2=4.2x;...`` derived field."""
+    out: dict[str, float] = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        val = val.strip()
+        if val.endswith("x"):
+            val = val[:-1]
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            continue  # non-numeric derived detail
+    return out
+
+
+def load_records(path: str) -> dict[str, dict]:
+    """Latest record per benchmark name (later lines win — a re-run
+    within one job supersedes its earlier emission)."""
+    records: dict[str, dict] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # tolerate a torn tail line
+            name = rec.get("name")
+            if name:
+                records[str(name)] = rec
+    return records
+
+
+def metrics_of(rec: dict) -> dict[str, float]:
+    out = {}
+    try:
+        out[TIME_METRIC] = float(rec.get(TIME_METRIC))
+    except (TypeError, ValueError):
+        pass
+    out.update(parse_derived(rec.get("derived", "")))
+    return out
+
+
+def compare(
+    baseline: dict[str, dict],
+    current: dict[str, dict],
+    threshold: float = 0.10,
+    time_threshold: float = 0.50,
+) -> list[Delta]:
+    """Deltas for every metric present in both files (benchmark-wise)."""
+    deltas: list[Delta] = []
+    for name in sorted(current):
+        base_rec = baseline.get(name)
+        if base_rec is None:
+            continue  # new benchmark: nothing to regress against
+        base_m = metrics_of(base_rec)
+        cur_m = metrics_of(current[name])
+        for key in cur_m:
+            if key not in base_m:
+                continue
+            b, c = base_m[key], cur_m[key]
+            if not (math.isfinite(b) and math.isfinite(c)):
+                continue
+            deltas.append(
+                Delta(
+                    bench=name,
+                    metric=key,
+                    baseline=b,
+                    current=c,
+                    higher_is_better=higher_is_better(key),
+                    threshold=(
+                        time_threshold if is_wallclock(key) else threshold
+                    ),
+                )
+            )
+    return deltas
+
+
+def format_table(deltas: list[Delta]) -> str:
+    header = (
+        f"{'benchmark':22s} {'metric':18s} {'baseline':>14s} "
+        f"{'current':>14s} {'change':>8s}  status"
+    )
+    lines = [header, "-" * len(header)]
+    for d in deltas:
+        arrow = "+" if d.change >= 0 else ""
+        status = "REGRESSED" if d.regressed else "ok"
+        lines.append(
+            f"{d.bench:22s} {d.metric:18s} {d.baseline:14.4g} "
+            f"{d.current:14.4g} {arrow}{100 * d.change:7.1f}%  {status}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="previous run's bench-results.jsonl")
+    ap.add_argument("current", help="this run's bench-results.jsonl")
+    ap.add_argument(
+        "--threshold", type=float, default=0.10,
+        help="max tolerated relative regression for derived headline "
+             "metrics (default 0.10 = 10%%)",
+    )
+    ap.add_argument(
+        "--time-threshold", type=float, default=0.50,
+        help="max tolerated relative regression for wall-clock metrics "
+             "(us_per_call, *seconds*, *speedup*; default 0.50 — CI "
+             "runner jitter)",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"trend: no baseline at {args.baseline!r} (first run, or the "
+            "previous run uploaded no artifact) — passing with a notice."
+        )
+        return 0
+    baseline = load_records(args.baseline)
+    current = load_records(args.current)
+    if not current:
+        print(f"trend: no records in {args.current!r} — nothing to gate.")
+        return 0
+
+    deltas = compare(
+        baseline, current,
+        threshold=args.threshold, time_threshold=args.time_threshold,
+    )
+    new = sorted(set(current) - set(baseline))
+    gone = sorted(set(baseline) - set(current))
+    print(format_table(deltas))
+    if new:
+        print(f"new benchmarks (no baseline yet): {', '.join(new)}")
+    if gone:
+        print(f"benchmarks absent from this run: {', '.join(gone)}")
+
+    regressions = [d for d in deltas if d.regressed]
+    if regressions:
+        print()
+        print(
+            f"trend: {len(regressions)} metric(s) regressed beyond the "
+            "threshold:"
+        )
+        print(format_table(regressions))
+        return 1
+    print("trend: no regressions beyond threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

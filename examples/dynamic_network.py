@@ -7,7 +7,8 @@ scenario and re-prices each one under a configurable ``Scenario``:
 
     PYTHONPATH=src python examples/dynamic_network.py \
         [--capacity-drop 0.5] [--local-drop 4] [--cross-flows 4] \
-        [--stragglers 2] [--churn-agent 3] [--no-reroute]
+        [--stragglers 2] [--churn-agent 3] [--no-reroute] \
+        [--stochastic] [--rollouts 5]
 
 Columns: τ_static is the closed-form per-iteration time on the healthy
 network; τ_scen the fluid-simulated makespan of the *static-optimal*
@@ -20,6 +21,15 @@ moved. ``--local-drop N`` degrades only the middle underlay hops of N
 overlay links' default paths (the hops a re-route can avoid) instead of
 every edge uniformly — a uniform drop moves no bottleneck, so there is
 nothing for phase-adaptive routing to exploit there.
+
+``--stochastic`` replaces the single deterministic scenario with a
+Markov-modulated capacity process on the same local-drop edges
+(persistent good↔degraded chain, ``StochasticScenario``) and prices
+each design as a *seeded expectation* over ``--rollouts`` realizations.
+The schedule column becomes the *online* re-router — deciding at every
+realized phase boundary from observed state only, with the
+carryover-aware objective — and the table reports E[τ] for both
+schedules plus the online p95 tail.
 """
 
 import argparse
@@ -31,11 +41,14 @@ from repro.net import (
     CapacityPhase,
     ChurnEvent,
     CrossTraffic,
+    MarkovLinkModel,
     Scenario,
+    StochasticScenario,
     StragglerEvent,
     build_overlay,
     compute_categories,
     lowest_degree_nodes,
+    mid_path_edges,
     roofnet_like,
 )
 from repro.runtime.fault_tolerance import failure_scenario
@@ -53,10 +66,14 @@ def build_scenario(args, overlay, tau_hint: float) -> Scenario:
             # rest of the round: re-routing pays off when the phase it
             # adapts to actually lasts.
             m = overlay.num_agents
-            drop: dict = {}
-            for i in range(min(args.local_drop, m - 1)):
-                for e in overlay.path_edges(i, i + 1)[1:-1]:
-                    drop[(min(e), max(e))] = args.capacity_drop
+            drop = {
+                e: args.capacity_drop
+                for e in mid_path_edges(
+                    overlay,
+                    [(i, i + 1)
+                     for i in range(min(args.local_drop, m - 1))],
+                )
+            }
             phases = (
                 CapacityPhase(
                     start=tau_hint / 6,
@@ -102,6 +119,33 @@ def build_scenario(args, overlay, tau_hint: float) -> Scenario:
     )
 
 
+def build_stochastic(args, overlay, tau_hint: float) -> StochasticScenario:
+    """Markov-modulated version of the local-drop degradation: the same
+    mid-path hops, but sagging and recovering stochastically (persistent
+    chain — mean sojourns of several boundaries), with the example's
+    deterministic cross-traffic/stragglers/churn riding in ``base``."""
+    m = overlay.num_agents
+    edges = mid_path_edges(
+        overlay,
+        [(i, i + 1) for i in range(min(max(args.local_drop, 1), m - 1))],
+    )
+    base = build_scenario(
+        argparse.Namespace(**{**vars(args), "capacity_drop": 1.0}),
+        overlay, tau_hint,
+    )
+    return StochasticScenario(
+        links=(MarkovLinkModel(
+            edges=edges or ((0, 1),),
+            scales=(1.0, args.capacity_drop if args.capacity_drop < 1.0
+                    else 0.1),
+            transition=((0.8, 0.2), (0.05, 0.95)),
+        ),),
+        step=0.5 * tau_hint,
+        horizon=8 * tau_hint,
+        base=base,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--agents", type=int, default=10)
@@ -120,6 +164,11 @@ def main() -> None:
     ap.add_argument("--no-reroute", action="store_true",
                     help="skip the phase-adaptive schedule (static "
                          "pricing only, as in earlier revisions)")
+    ap.add_argument("--stochastic", action="store_true",
+                    help="Markov-modulate the local-drop edges and price "
+                         "as a seeded expectation (online re-routing)")
+    ap.add_argument("--rollouts", type=int, default=5,
+                    help="realizations per design in --stochastic mode")
     ap.add_argument("--milp-time-limit", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -136,13 +185,17 @@ def main() -> None:
         f"agents={args.agents} drop={args.capacity_drop} "
         f"local={args.local_drop} cross={args.cross_flows} "
         f"stragglers={args.stragglers} churn={args.churn_agent} "
-        f"reroute={reroute}"
+        f"reroute={reroute} stochastic={args.stochastic}"
+        + (f" rollouts={args.rollouts}" if args.stochastic else "")
     )
-    header = (
-        f"{'method':8s} {'tau_static':>11s} {'tau_scen':>10s} "
-    )
+    header = f"{'method':8s} {'tau_static':>11s} "
+    scen_col = "E[tau_scen]" if args.stochastic else "tau_scen"
+    header += f"{scen_col:>11s} "
     if reroute:
-        header += f"{'tau_phased':>11s} {'win':>6s} "
+        on_col = "E[tau_onl]" if args.stochastic else "tau_phased"
+        header += f"{on_col:>11s} {'win':>6s} "
+        if args.stochastic:
+            header += f"{'p95_onl':>9s} "
     header += f"{'total_h':>9s} {'total_scen_h':>13s}"
     print(header)
     for method in ("ring", "clique", "fmmd-wp"):
@@ -151,13 +204,24 @@ def main() -> None:
             constants=consts, optimize_routing=reroute,
             milp_time_limit=args.milp_time_limit,
         )
-        scenario = build_scenario(args, ov, static.tau or 1.0)
-        degraded = design(
-            method, cats, kappa, args.agents, overlay=ov,
-            constants=consts, optimize_routing=reroute,
-            scenario=scenario, reroute_per_phase=reroute,
-            milp_time_limit=args.milp_time_limit,
-        )
+        if args.stochastic:
+            sto = build_stochastic(args, ov, static.tau or 1.0)
+            degraded = design(
+                method, cats, kappa, args.agents, overlay=ov,
+                constants=consts, optimize_routing=reroute,
+                stochastic=sto, stochastic_rollouts=args.rollouts,
+                stochastic_seed=args.seed,
+                reroute_per_phase=reroute,
+                milp_time_limit=args.milp_time_limit,
+            )
+        else:
+            scenario = build_scenario(args, ov, static.tau or 1.0)
+            degraded = design(
+                method, cats, kappa, args.agents, overlay=ov,
+                constants=consts, optimize_routing=reroute,
+                scenario=scenario, reroute_per_phase=reroute,
+                milp_time_limit=args.milp_time_limit,
+            )
         row = f"{method:8s} {static.tau:11.1f} "
         if reroute:
             win = (
@@ -165,11 +229,13 @@ def main() -> None:
                 if degraded.tau_phased else float("nan")
             )
             row += (
-                f"{degraded.tau_static_sched:10.1f} "
+                f"{degraded.tau_static_sched:11.1f} "
                 f"{degraded.tau_phased:11.1f} {win:5.2f}x "
             )
+            if args.stochastic:
+                row += f"{degraded.tau_p95:9.1f} "
         else:
-            row += f"{degraded.tau:10.1f} "
+            row += f"{degraded.tau:11.1f} "
         row += (
             f"{static.total_time/3600:9.1f} "
             f"{degraded.total_time/3600:13.1f}"

@@ -48,6 +48,7 @@ from repro.net.simulator import (
     simulate,
     simulate_phased,
 )
+from repro.net.stochastic import StochasticScenario
 from repro.net.topology import OverlayNetwork
 
 
@@ -67,6 +68,13 @@ class DesignOutcome:
     sim_phased: SimResult | None = None
     tau_static_sched: float = float("nan")  # simulated τ, static schedule
     tau_phased: float = float("nan")        # simulated τ, phased schedule
+    # Stochastic pricing (``stochastic=`` + ``stochastic_rollouts=N``):
+    # per-rollout simulated τ of the deployed schedule (online re-routed
+    # when ``reroute_per_phase``, else static), its seeded mean — which
+    # ``tau``/``total_time`` then price — and the p95 tail.
+    tau_samples: tuple[float, ...] = ()
+    tau_mean: float = float("nan")
+    tau_p95: float = float("nan")
 
     @property
     def name(self) -> str:
@@ -87,6 +95,9 @@ def evaluate_design(
     routing_cache: MutableMapping | None = None,
     heuristic_rounds: int = 8,
     reroute_per_phase: bool = False,
+    stochastic: StochasticScenario | None = None,
+    stochastic_rollouts: int = 8,
+    stochastic_seed: int = 0,
 ) -> DesignOutcome:
     """Route the design's demands and price its total training time.
 
@@ -110,16 +121,35 @@ def evaluate_design(
     the design is priced at the better of the two — the schedule an
     operator would actually deploy. Requires ``optimize_routing``.
 
+    ``stochastic`` (a ``StochasticScenario``) prices the design as a
+    *seeded expectation*: ``stochastic_rollouts`` realizations are drawn
+    with keys ``(stochastic_seed, r)``, each is simulated — with
+    ``reroute_per_phase=True`` the deployed schedule is the *online*
+    re-router (``route_time_expanded(online=True)``, deciding at every
+    boundary from the realized state only), else the static one — and
+    ``tau`` becomes the mean over rollouts (``tau_mean``), with the p95
+    tail in ``tau_p95`` and every sample in ``tau_samples``. Mutually
+    exclusive with ``scenario`` (a stochastic model IS a distribution
+    over scenarios); deterministic events ride in ``stochastic.base``.
+
     ``incidence`` (precompiled ``CategoryIncidence``) and
     ``routing_cache`` (activated-link-set → ``RoutingSolution``;
     phase-adaptive segments under ``(link-set, phase-scale)`` keys)
     amortize routing work across repeated calls with the same
     categories/κ/routing settings — different FMMD iteration counts
     frequently activate the same link set, so a grid sweep rarely
-    re-routes.
+    re-routes; stochastic rollouts reuse it too (recurring Markov states
+    re-realize the same per-edge scales).
     """
-    if scenario is not None and overlay is None:
+    if (scenario is not None or stochastic is not None) and overlay is None:
         raise ValueError("scenario pricing requires the overlay")
+    if scenario is not None and stochastic is not None:
+        raise ValueError(
+            "pass either a deterministic scenario or a stochastic model, "
+            "not both (deterministic events ride in stochastic.base)"
+        )
+    if stochastic is not None and stochastic_rollouts < 1:
+        raise ValueError("stochastic_rollouts must be >= 1")
     if reroute_per_phase and not optimize_routing:
         raise ValueError(
             "reroute_per_phase re-optimizes routing per capacity phase; "
@@ -167,7 +197,48 @@ def evaluate_design(
     tau = sol.completion_time
     tau_static_sched = float("nan")
     tau_phased = float("nan")
-    if scenario is not None and demands:
+    tau_samples: tuple[float, ...] = ()
+    tau_mean = float("nan")
+    tau_p95 = float("nan")
+    if stochastic is not None and demands:
+        static_samples = []
+        online_samples = []
+        for realization in stochastic.sample_many(
+            stochastic_seed, stochastic_rollouts
+        ):
+            sim = simulate(sol, overlay, scenario=realization)
+            static_samples.append(_priced_tau(sim))
+            if reroute_per_phase and realization.capacity_phases:
+                # The deployed policy: online re-routing from observed
+                # state at every realized phase boundary.
+                phased = route_time_expanded(
+                    demands, categories, realization, kappa, num_agents,
+                    time_limit=milp_time_limit, incidence=incidence,
+                    heuristic_rounds=heuristic_rounds,
+                    routing_cache=routing_cache,
+                    cache_key=frozenset(links), base_solution=sol,
+                    online=True, overlay=overlay,
+                )
+                sim_phased = simulate_phased(
+                    phased, overlay, scenario=realization
+                )
+                online_samples.append(_priced_tau(sim_phased))
+            elif reroute_per_phase:
+                # Trivial realization: the online schedule degenerates
+                # to the static route bitwise — reuse its sample.
+                online_samples.append(static_samples[-1])
+        # ``sim``/``sim_phased``/``phased_routing`` keep the LAST
+        # rollout's artifacts (inspection aids); the pricing is the
+        # seeded expectation over all of them.
+        samples = online_samples if reroute_per_phase else static_samples
+        tau_samples = tuple(float(s) for s in samples)
+        tau_mean = float(np.mean(samples))
+        tau_p95 = float(np.percentile(samples, 95.0))
+        tau = tau_mean
+        tau_static_sched = float(np.mean(static_samples))
+        if reroute_per_phase:
+            tau_phased = float(np.mean(online_samples))
+    elif scenario is not None and demands:
         sim = simulate(sol, overlay, scenario=scenario)
         tau = tau_static_sched = _priced_tau(sim)
         if reroute_per_phase and scenario.capacity_phases:
@@ -197,6 +268,9 @@ def evaluate_design(
         sim_phased=sim_phased,
         tau_static_sched=tau_static_sched,
         tau_phased=tau_phased,
+        tau_samples=tau_samples,
+        tau_mean=tau_mean,
+        tau_p95=tau_p95,
     )
 
 
@@ -215,6 +289,9 @@ def design(
     routing_cache: MutableMapping | None = None,
     heuristic_rounds: int = 8,
     reroute_per_phase: bool = False,
+    stochastic: StochasticScenario | None = None,
+    stochastic_rollouts: int = 8,
+    stochastic_seed: int = 0,
 ) -> DesignOutcome:
     """Produce and price one named design.
 
@@ -222,7 +299,9 @@ def design(
               "prim", "sca"}. ``scenario`` prices the design under a
     degraded/time-varying network (requires ``overlay``);
     ``reroute_per_phase`` additionally prices the phase-adaptive
-    schedule (see ``evaluate_design``);
+    schedule (see ``evaluate_design``); ``stochastic`` prices it as a
+    seeded expectation over ``stochastic_rollouts`` realizations
+    (online re-routed when ``reroute_per_phase``);
     ``incidence``/``routing_cache`` amortize routing across repeated
     calls (see ``evaluate_design``).
     """
@@ -255,6 +334,9 @@ def design(
         scenario=scenario, incidence=incidence,
         routing_cache=routing_cache, heuristic_rounds=heuristic_rounds,
         reroute_per_phase=reroute_per_phase,
+        stochastic=stochastic,
+        stochastic_rollouts=stochastic_rollouts,
+        stochastic_seed=stochastic_seed,
     )
 
 
@@ -271,13 +353,20 @@ def sweep_iterations(
     milp_time_limit: float = 60.0,
     heuristic_rounds: int = 8,
     reroute_per_phase: bool = False,
+    stochastic: StochasticScenario | None = None,
+    stochastic_rollouts: int = 8,
+    stochastic_seed: int = 0,
 ) -> DesignOutcome:
     """Outer search over the design method's T for the best total time.
 
     ``overlay``/``scenario`` price every grid point under a degraded or
     time-varying network; ``reroute_per_phase`` prices the
     phase-adaptive schedule alongside the static one at every grid
-    point (see ``evaluate_design``); ``optimize_routing=False`` skips
+    point (see ``evaluate_design``); ``stochastic`` prices every grid
+    point as a seeded expectation over ``stochastic_rollouts``
+    realizations — every point sees the SAME realizations (common
+    random numbers), so the T comparison is not confounded by sampling
+    noise; ``optimize_routing=False`` skips
     the routing optimizer (default paths only), ``milp_time_limit``
     caps each point's MILP, and ``heuristic_rounds`` tunes the
     congestion-aware re-routing budget. The link×category incidence is
@@ -304,6 +393,9 @@ def sweep_iterations(
             routing_cache=routing_cache,
             heuristic_rounds=heuristic_rounds,
             reroute_per_phase=reroute_per_phase,
+            stochastic=stochastic,
+            stochastic_rollouts=stochastic_rollouts,
+            stochastic_seed=stochastic_seed,
         )
         if np.isfinite(out.total_time) and (
             best is None or out.total_time < best.total_time

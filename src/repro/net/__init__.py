@@ -24,15 +24,22 @@ from repro.net.routing import (
 from repro.net.simulator import (
     BranchIncidence,
     CapacityPhase,
+    CarryoverState,
     ChurnEvent,
     CrossTraffic,
     Scenario,
     SimResult,
     StragglerEvent,
+    carryover_state,
     compile_incidence,
     lemma31_time,
     simulate,
     simulate_phased,
+)
+from repro.net.stochastic import (
+    CorrelatedOutages,
+    MarkovLinkModel,
+    StochasticScenario,
 )
 from repro.net.topology import (
     MBPS,
@@ -45,6 +52,7 @@ from repro.net.topology import (
     ici_torus_underlay,
     line_underlay,
     lowest_degree_nodes,
+    mid_path_edges,
     random_geometric_underlay,
     roofnet_like,
 )

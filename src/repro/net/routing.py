@@ -756,6 +756,52 @@ def _scale_key(scale) -> object:
     return float(scale)
 
 
+def _carryover_completion_time(
+    trees: Sequence[frozenset],
+    demands: Sequence[MulticastDemand],
+    categories: Categories,
+    state,
+) -> float:
+    """Remaining completion time of ``trees`` given realized per-branch
+    state — the carryover-aware segment objective of online re-routing.
+
+    Generalizes Lemma III.2's τ to heterogeneous residual volumes: per
+    category F the bottleneck must still carry
+    Σ_{(i,j)∈F} Σ_h v_{h,(i,j)} bytes, where a branch's volume v is the
+    flow's full size for a *fresh* overlay link (the restart cost a
+    swap incurs — mid-flight data on abandoned links is lost), the
+    carried remainder for a surviving in-flight link, and 0 for a
+    branch that already finished. Branches of delivered flows,
+    cancelled branches, and branches touching departed agents carry
+    nothing. ``state`` is a ``repro.net.simulator.CarryoverState``.
+    """
+    departed = set(state.departed)
+    vol: dict[tuple[int, int], float] = {}
+    for h, tree in enumerate(trees):
+        if not math.isnan(state.flow_done[h]):
+            continue  # flow already delivered everywhere it could
+        if demands[h].source in departed:
+            continue  # nothing left to send; churn cancelled the flow
+        for (i, j) in tree:
+            key = (h, i, j)
+            if key in state.cancelled or i in departed or j in departed:
+                continue
+            v = state.remaining.get(key)
+            if v is None:
+                v = 0.0 if key in state.done else float(demands[h].size)
+            if v > 0.0:
+                vol[(i, j)] = vol.get((i, j), 0.0) + v
+    if not vol:
+        return 0.0
+    return max(
+        (
+            sum(vol.get(l, 0.0) for l in F) / categories.capacity[F]
+            for F in categories.families
+        ),
+        default=0.0,
+    )
+
+
 def route_time_expanded(
     demands: Sequence[MulticastDemand],
     categories: Categories,
@@ -770,6 +816,8 @@ def route_time_expanded(
     routing_cache: "MutableMapping | None" = None,
     cache_key=None,
     base_solution: "RoutingSolution | None" = None,
+    online: bool = False,
+    overlay=None,
 ) -> PhasedRoutingSolution:
     """Time-expanded routing: one ``route()`` per capacity phase.
 
@@ -797,13 +845,39 @@ def route_time_expanded(
     segment that is bitwise-identical to static ``route()`` with the
     same arguments. ``metadata['routed_segments']`` counts the segments
     actually solved this call (vs. served from the cache).
+
+    ``online=True`` switches to *observed-state* re-routing (requires
+    ``overlay``): the scenario is a realized sample (e.g. from
+    ``StochasticScenario.sample``) that the router pretends to discover
+    phase by phase — at each boundary it sees only the capacities
+    realized so far (``carryover_state`` simulates the committed prefix,
+    which applies no condition beyond the boundary, so there is no
+    lookahead), and the keep-vs-switch decision uses the
+    *carryover-aware* objective ``_carryover_completion_time``: the
+    restart cost of abandoning in-flight links (their volume restarts
+    from full κ) is charged explicitly instead of the offline swap
+    guard's full-volume closed form. A switch happens only when it is
+    strictly better under that objective; ``metadata['reroutes']``
+    counts the boundaries that actually switched trees. Each decision
+    re-simulates the committed prefix from t=0 (O(boundaries²) segment
+    events per realization — fine for the diurnal-scale scenarios the
+    benchmarks use; an incremental-resume snapshot is the known
+    optimization if realizations ever have hundreds of distinct-tree
+    boundaries).
     """
     t0 = time.perf_counter()
+    if online and overlay is None:
+        raise ValueError(
+            "online re-routing needs the overlay to snapshot realized "
+            "state (carryover_state)"
+        )
     segs = _phase_segments(scenario)
+    boundaries = tuple(start for start, _ in segs)
     solutions: list[RoutingSolution] = []
     by_scale: dict = {}
     routed = 0
-    for _, scale in segs:
+    reroutes = 0
+    for si, (start, scale) in enumerate(segs):
         key = _scale_key(scale)
         seg_cats = categories.scaled(scale)
         # The raw per-scale solution is what gets cached; the swap guard
@@ -835,27 +909,62 @@ def route_time_expanded(
         if routing_cache is not None and cache_key is not None:
             routing_cache[(cache_key, key)] = sol
         if solutions:
-            # Swap guard: keep the in-flight trees unless the re-route
-            # strictly improves the closed-form τ under this phase's
-            # capacities.
             prev = solutions[-1]
-            if sol is not prev and (
-                sol.trees == prev.trees
-                or completion_time(prev.trees, seg_cats, kappa)
-                <= sol.completion_time
-            ):
-                sol = prev
+            if sol is prev or sol.trees == prev.trees:
+                sol = prev  # same trees: never a swap, share the object
+            elif online:
+                # Observed-state decision: simulate the committed
+                # schedule up to this boundary (no condition beyond it
+                # is applied — no lookahead) and compare the carryover-
+                # aware remaining times. Switching charges the restart
+                # of every in-flight branch whose link the new trees
+                # abandon; keeping charges only the carried remainders.
+                from repro.net.simulator import carryover_state
+
+                prefix = PhasedRoutingSolution(
+                    demands=tuple(demands),
+                    boundaries=boundaries[:si],
+                    solutions=tuple(solutions),
+                    completion_time=solutions[0].completion_time,
+                    method="online_prefix",
+                    solve_seconds=0.0,
+                )
+                state = carryover_state(
+                    prefix, overlay, start, scenario=scenario
+                )
+                t_keep = _carryover_completion_time(
+                    prev.trees, demands, seg_cats, state
+                )
+                t_switch = _carryover_completion_time(
+                    sol.trees, demands, seg_cats, state
+                )
+                if t_switch < t_keep:
+                    reroutes += 1
+                else:
+                    sol = prev
+            else:
+                # Offline swap guard: keep the in-flight trees unless
+                # the re-route strictly improves the closed-form τ
+                # under this phase's capacities.
+                if (
+                    completion_time(prev.trees, seg_cats, kappa)
+                    <= sol.completion_time
+                ):
+                    sol = prev
+                else:
+                    reroutes += 1
         solutions.append(sol)
     return PhasedRoutingSolution(
         demands=tuple(demands),
-        boundaries=tuple(start for start, _ in segs),
+        boundaries=boundaries,
         solutions=tuple(solutions),
         completion_time=solutions[0].completion_time,
-        method="time_expanded",
+        method="time_expanded_online" if online else "time_expanded",
         solve_seconds=time.perf_counter() - t0,
         metadata={
             "segment_times": tuple(s.completion_time for s in solutions),
             "segment_methods": tuple(s.method for s in solutions),
             "routed_segments": routed,
+            "reroutes": reroutes,
         },
     )

@@ -14,16 +14,20 @@ overlay path.
 
 Three engines share the same event arithmetic:
 
-  * ``engine="vectorized"`` (default) — precomputes a branch×edge
-    incidence matrix once per routing solution and runs progressive
-    filling as numpy matrix/mask operations; tractable at 100+ agents /
-    1000+ branches, and (with "batched") supports ``Scenario``.
-  * ``engine="batched"`` — opt-in water-filling variant that freezes all
-    tied bottlenecks per round instead of one; fewer allocation rounds on
-    symmetric instances, but a different fp drain order, so the makespan
-    matches "vectorized" only to rtol=1e-9 (property-tested).
+  * ``engine="batched"`` (default) — water-filling variant that freezes
+    all tied bottlenecks per round instead of one; fewer allocation
+    rounds and the fastest at 200+ agents, but a different fp drain
+    order, so the makespan matches "vectorized" only to rtol=1e-9
+    (property-tested at small sizes, nightly-gated at 220 agents by
+    ``benchmarks/engine_parity.py``).
+  * ``engine="vectorized"`` — precomputes a branch×edge incidence
+    matrix once per routing solution and runs progressive filling as
+    numpy matrix/mask operations, freezing one bottleneck per round in
+    the reference's first-encounter tie-break order — bitwise-identical
+    to the reference engine (property-tested).
   * ``engine="reference"``  — the original pure-Python dict loops, kept
-    as the ground truth the vectorized engine is property-tested against.
+    as the ground-truth escape hatch the vectorized engine is
+    property-tested against.
 
 The ``Scenario`` layer models operating conditions beyond the paper's
 static network: piecewise-constant time-varying link capacities,
@@ -319,6 +323,20 @@ def _branch_entries(inc: BranchIncidence, idx: np.ndarray) -> np.ndarray:
     return fe[flat_pos]
 
 
+def _edge_crossers(inc: BranchIncidence, idx: np.ndarray) -> np.ndarray:
+    """Branches crossing edges ``idx`` — the CSC multi-slice gather
+    (duplicates retained; the analogue of ``_branch_entries``)."""
+    eb, eptr = inc.edge_branch, inc.edge_ptr
+    if idx.size == 1:
+        e = int(idx[0])
+        return eb[eptr[e] : eptr[e + 1]]
+    starts = eptr[idx]
+    lens = eptr[idx + 1] - starts
+    cum = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    flat_pos = np.arange(int(lens.sum())) + np.repeat(starts - cum, lens)
+    return eb[flat_pos]
+
+
 def _maxmin_rates_vec(
     active: np.ndarray,
     inc: BranchIncidence,
@@ -417,7 +435,6 @@ def _maxmin_rates_batched(
         counts = counts.copy()
     share = np.empty(inc.num_edges)
     valid = np.empty(inc.num_edges, dtype=bool)
-    fb, fe = inc.flat_branch, inc.flat_edge
     while n_unfrozen:
         np.greater(counts, 0, out=valid)
         share.fill(np.inf)
@@ -426,8 +443,11 @@ def _maxmin_rates_batched(
         if not np.isfinite(smin):
             break  # no edge carries an unfrozen branch
         tied = share == smin
-        sel = unfrozen[fb] & tied[fe]
-        idx = np.unique(fb[sel])  # every unfrozen crosser of a tied edge
+        # Every unfrozen crosser of a tied edge, via CSC slices of just
+        # those edges (a full entry-array scan per round would dominate
+        # at 200+ agents).
+        crossers = _edge_crossers(inc, np.flatnonzero(tied))
+        idx = np.unique(crossers[unfrozen[crossers]])
         rates[idx] = smin
         unfrozen[idx] = False
         n_unfrozen -= idx.size
@@ -588,6 +608,28 @@ def _branch_keys(inc: BranchIncidence) -> list[tuple[int, int, int]]:
     ]
 
 
+@dataclasses.dataclass(frozen=True)
+class CarryoverState:
+    """Realized per-branch transfer state at one instant of a run.
+
+    The observed-state snapshot an *online* re-router decides from at a
+    phase boundary (``carryover_state``): ``remaining[(h, i, j)]`` is
+    the volume still in flight on flow h's overlay link (i, j) —
+    abandoning that link costs a restart from full κ; ``done`` maps
+    finished branches to their finish times; ``cancelled`` holds
+    churn-cancelled branch keys; ``flow_done[h]`` is flow h's completion
+    time (NaN while unfinished); ``departed`` lists agents that have
+    churned away by ``time``.
+    """
+
+    time: float
+    remaining: Mapping[tuple[int, int, int], float]
+    done: Mapping[tuple[int, int, int], float]
+    cancelled: frozenset
+    flow_done: tuple[float, ...]
+    departed: tuple[int, ...]
+
+
 def _simulate_vectorized(
     sol: RoutingSolution,
     overlay: OverlayNetwork,
@@ -598,6 +640,8 @@ def _simulate_vectorized(
     batched: bool = False,
     segments: Sequence[tuple[float, RoutingSolution, BranchIncidence]]
     | None = None,
+    stop_time: float = math.inf,
+    state_out: dict | None = None,
 ) -> SimResult:
     """Event loop, optionally swapping the active ``BranchIncidence``.
 
@@ -611,6 +655,14 @@ def _simulate_vectorized(
     agents never reactivate — so the phased makespan is exact under the
     same fluid model. Without ``segments`` this is the single-incidence
     loop unchanged.
+
+    ``stop_time`` halts the run at that instant (landing on it exactly,
+    like a phase breakpoint); with ``state_out`` the per-branch state at
+    loop exit is folded out by branch key into the supplied dict
+    (``remaining``/``done``/``cancelled``/``flow_done``/``departed``/
+    ``time``) — how ``carryover_state`` snapshots a prefix of a run for
+    the online re-router. A finite ``stop_time`` truncates the returned
+    ``SimResult`` (in-flight branches count as unfinished).
     """
     if segments is None:
         segments = ((0.0, sol, inc),)
@@ -657,6 +709,8 @@ def _simulate_vectorized(
     cur_phase = -1  # latest phase with start <= t (t is monotone)
 
     for si in range(n_seg):
+        if segments[si][0] >= stop_time:
+            break  # segments at/after the stop instant never start
         seg_start, seg_sol, seg_inc = segments[si]
         seg_end = segments[si + 1][0] if si + 1 < n_seg else math.inf
         # If the previous segment drained (or churned) empty before its
@@ -734,7 +788,10 @@ def _simulate_vectorized(
             if idx.size:
                 np.subtract.at(counts, _branch_entries(inc, idx), 1.0)
 
-        while active.any() and events < max_events and t < seg_end:
+        while (
+            active.any() and events < max_events
+            and t < seg_end and t < stop_time
+        ):
             # Apply departures due by now: cancel branches on overlay
             # links touching the agent and all branches of flows it
             # sources.
@@ -796,8 +853,9 @@ def _simulate_vectorized(
                 breakpoints[bp_ptr] if bp_ptr < len(breakpoints)
                 else math.inf
             )
-            if seg_end < t_next:
-                t_next = seg_end  # re-route boundary acts as an event
+            eff_end = seg_end if seg_end < stop_time else stop_time
+            if eff_end < t_next:
+                t_next = eff_end  # boundary/stop instant acts as an event
 
             if not np.any(rates > 0):
                 if math.isinf(t_next):
@@ -823,7 +881,7 @@ def _simulate_vectorized(
             drop_counts(finished)
             events += 1
 
-        if n_seg > 1:
+        if n_seg > 1 or state_out is not None:
             # Fold this segment's state out by branch key. The map is
             # rebuilt from scratch: a key absent from this segment's
             # trees was abandoned by the re-route, and its partial
@@ -847,13 +905,25 @@ def _simulate_vectorized(
                         vals = done_time[selm & ~cancelled]
                         if vals.size and not np.isnan(vals).any():
                             flow_done[h] = float(np.max(vals))
-        if events >= max_events or (n_seg == 1 and not active.any()):
+        if (
+            events >= max_events or t >= stop_time
+            or (n_seg == 1 and not active.any())
+        ):
             break
         # Multi-segment runs fall through even when this segment's
         # active set churned/drained empty: a later re-route can add
         # fresh branches (links avoiding the departed agents) that still
         # deliver for unfinished flows.
 
+    if state_out is not None:
+        state_out.update(
+            time=t,
+            remaining=dict(remaining_map),
+            done=dict(done_map),
+            cancelled=set(cancelled_keys),
+            flow_done=flow_done.copy(),
+            departed=list(departed),
+        )
     result = _collect_result(
         sol, seg_inc.flows, done_time, cancelled, events,
         unfinished=int(active.sum()),
@@ -928,17 +998,20 @@ def simulate(
     fairness: str = "maxmin",
     max_events: int = 100_000,
     scenario: Scenario | None = None,
-    engine: str = "vectorized",
+    engine: str = "batched",
 ) -> SimResult:
     """Simulate completion of all multicast demands under ``sol``.
 
     fairness: "maxmin" (TCP-like, dynamic reallocation on completions) or
     "equal" (static equal split, re-evaluated on completions).
     scenario: optional time-varying conditions (vectorized engines only).
-    engine: "vectorized" (incidence-matrix numpy core), "batched"
-    (opt-in water-filling that freezes all tied bottlenecks per round;
-    makespan agrees with "vectorized" to rtol=1e-9, not bitwise), or
-    "reference" (original dict loops, scenario-free ground truth).
+    engine: "batched" (default — water-filling that freezes all tied
+    bottlenecks per round; fastest at 200+ agents, nightly-gated to
+    rtol=1e-9 makespan parity by ``benchmarks/engine_parity.py``),
+    "vectorized" (one bottleneck per round, replaying the reference
+    tie-break order — bitwise-identical to "reference",
+    property-tested), or "reference" (original dict loops, the
+    scenario-free pure-Python escape hatch).
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")
@@ -977,7 +1050,7 @@ def simulate_phased(
     fairness: str = "maxmin",
     max_events: int = 100_000,
     scenario: Scenario | None = None,
-    engine: str = "vectorized",
+    engine: str = "batched",
 ) -> SimResult:
     """Simulate a ``PhasedRoutingSolution`` (time-expanded routing).
 
@@ -1023,6 +1096,71 @@ def simulate_phased(
     return _simulate_vectorized(
         base, overlay, segments[0][2], fairness, max_events, scenario,
         batched=(engine == "batched"), segments=tuple(segments),
+    )
+
+
+def carryover_state(
+    phased,
+    overlay: OverlayNetwork,
+    stop_time: float,
+    fairness: str = "maxmin",
+    max_events: int = 100_000,
+    scenario: Scenario | None = None,
+    engine: str = "batched",
+) -> CarryoverState:
+    """Snapshot the realized per-branch state of a phased run at an
+    instant — what an online re-router is allowed to observe.
+
+    Runs ``simulate_phased``'s event loop on ``phased`` (segments at or
+    after ``stop_time`` never start) and halts exactly at ``stop_time``,
+    folding every branch's state out by (flow, overlay-link) key. The
+    scenario may extend past ``stop_time``: the loop only ever applies
+    conditions with ``start <= t``, so the snapshot contains no
+    lookahead — future phases cannot leak into it. A churn event at
+    exactly ``stop_time`` belongs to the next segment and is *not*
+    applied.
+    """
+    if fairness not in ("maxmin", "equal"):
+        raise ValueError(f"unknown fairness {fairness!r}")
+    if engine not in ("vectorized", "batched"):
+        raise ValueError(
+            "carryover snapshots require a vectorized engine "
+            "('vectorized' or 'batched')"
+        )
+    if not math.isfinite(stop_time) or stop_time < 0:
+        raise ValueError(f"stop_time must be finite and >= 0: {stop_time}")
+    base = phased.solutions[0]
+    if stop_time <= phased.boundaries[0]:
+        # Nothing has run yet: every branch is fresh, no flow finished.
+        return CarryoverState(
+            time=float(stop_time), remaining={}, done={},
+            cancelled=frozenset(),
+            flow_done=tuple(math.nan for _ in base.demands),
+            departed=(),
+        )
+    if scenario is not None and scenario.is_trivial:
+        scenario = None
+    compiled: dict[tuple, BranchIncidence] = {}
+    segments = []
+    for start, sol in zip(phased.boundaries, phased.solutions):
+        inc = compiled.get(sol.trees)
+        if inc is None:
+            inc = compile_incidence(sol, overlay)
+            compiled[sol.trees] = inc
+        segments.append((start, sol, inc))
+    state: dict = {}
+    _simulate_vectorized(
+        base, overlay, segments[0][2], fairness, max_events, scenario,
+        batched=(engine == "batched"), segments=tuple(segments),
+        stop_time=stop_time, state_out=state,
+    )
+    return CarryoverState(
+        time=float(state["time"]),
+        remaining=state["remaining"],
+        done=state["done"],
+        cancelled=frozenset(state["cancelled"]),
+        flow_done=tuple(float(x) for x in state["flow_done"]),
+        departed=tuple(state["departed"]),
     )
 
 

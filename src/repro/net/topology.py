@@ -185,6 +185,21 @@ def lowest_degree_nodes(underlay: Underlay, m: int) -> list[int]:
     return [n for n, _ in deg[:m]]
 
 
+def mid_path_edges(
+    overlay: OverlayNetwork, pairs: Sequence[tuple[int, int]]
+) -> tuple[tuple[int, int], ...]:
+    """Undirected mid-path underlay hops of the given overlay links'
+    default paths — the hops a re-route can actually avoid (agent access
+    edges, which every schedule must cross, are excluded). The canonical
+    edge set for localized-degradation scenarios; sorted (min, max)
+    pairs, deduplicated across links."""
+    return tuple(sorted({
+        (min(e), max(e))
+        for (i, j) in pairs
+        for e in overlay.path_edges(i, j)[1:-1]
+    }))
+
+
 # ---------------------------------------------------------------------------
 # Topology generators
 # ---------------------------------------------------------------------------

@@ -1,0 +1,465 @@
+"""Stochastic scenario layer: sampling determinism, realization
+structure, online re-routing degeneracy/carryover, and the designer's
+seeded-expectation pricing."""
+
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.net import (
+    CapacityPhase,
+    ChurnEvent,
+    CorrelatedOutages,
+    MarkovLinkModel,
+    Scenario,
+    StochasticScenario,
+    build_overlay,
+    carryover_state,
+    compute_categories,
+    demands_from_links,
+    mid_path_edges,
+    random_geometric_underlay,
+    route,
+    route_time_expanded,
+    simulate,
+    simulate_phased,
+)
+from repro.net.routing import (
+    PhasedRoutingSolution,
+    _carryover_completion_time,
+)
+
+
+def _instance(seed: int, m: int):
+    u = random_geometric_underlay(12, radius=0.5, seed=seed)
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    rng = np.random.default_rng(seed)
+    links = [
+        (i, j) for i in range(m) for j in range(i + 1, m)
+        if rng.random() < 0.6
+    ] or [(0, 1)]
+    demands = demands_from_links(links, 1e6, m)
+    return u, ov, cats, demands
+
+
+_mid_path_edges = mid_path_edges  # the canonical helper, short alias
+
+
+def _two_state(edges, stay_good=0.5, stay_bad=0.75, drop=0.05, initial=0):
+    return MarkovLinkModel(
+        edges=edges, scales=(1.0, drop),
+        transition=(
+            (stay_good, 1.0 - stay_good),
+            (1.0 - stay_bad, stay_bad),
+        ),
+        initial=initial,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sampling determinism and structure
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40), m=st.integers(3, 6), key=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_same_key_bitwise_identical_realization_and_makespan(seed, m, key):
+    """Property: the same key draws a bitwise-identical realization, and
+    simulating the same schedule under both draws gives the *identical*
+    makespan — stochastic pricing is a seeded expectation, not a flaky
+    number."""
+    _, ov, cats, demands = _instance(seed, m)
+    sol = route(demands, cats, 1e6, m, milp_var_budget=0, seed=seed)
+    tau = sol.completion_time
+    edges = _mid_path_edges(ov, [(i, (i + 1) % m) for i in range(m - 1)])
+    if not edges:
+        edges = ((0, 1),)
+    sto = StochasticScenario(
+        links=(_two_state(edges),),
+        outages=CorrelatedOutages(
+            groups=(edges[:1], edges[-1:]), shock_prob=0.3,
+            group_prob=0.8, duration_steps=2, scale=0.1,
+        ),
+        step=0.4 * tau, horizon=6 * tau,
+        churn_agents=(0,), churn_hazard=0.05,
+    )
+    r1, r2 = sto.sample(key), sto.sample(key)
+    assert r1 == r2  # dataclass equality over phases/churn: bitwise draw
+    assert r1.capacity_phases == r2.capacity_phases
+    assert r1.churn == r2.churn
+    churned = {c.agent for c in r1.churn}
+    phased = PhasedRoutingSolution(
+        demands=tuple(demands), boundaries=(0.0,), solutions=(sol,),
+        completion_time=tau, method="static", solve_seconds=0.0,
+    )
+    s1 = simulate_phased(phased, ov, scenario=r1)
+    s2 = simulate_phased(phased, ov, scenario=r2)
+    if not churned:  # churn can cancel everything; makespan 0 == 0 then
+        assert s1.makespan > 0
+    assert s1.makespan == s2.makespan
+    assert s1.flow_completion == s2.flow_completion
+
+
+@given(seed=st.integers(0, 30), m=st.integers(3, 5))
+@settings(max_examples=10, deadline=None)
+def test_different_keys_draw_distinct_schedules(seed, m):
+    """Property: distinct keys give distinct phase schedules (with a
+    fair-coin chain over 30+ steps, collisions are ~2^-29)."""
+    _, ov, cats, _ = _instance(seed, m)
+    edges = _mid_path_edges(ov, [(0, 1)]) or ((0, 1),)
+    sto = StochasticScenario(
+        links=(_two_state(edges, stay_good=0.5, stay_bad=0.5),),
+        step=1.0, horizon=40.0,
+    )
+    assert sto.sample(seed) != sto.sample(seed + 1)
+    assert (
+        sto.sample(seed).capacity_phases
+        != sto.sample(seed + 1).capacity_phases
+    )
+
+
+def test_realizations_are_minimal_piecewise_constant():
+    """Consecutive boundaries with an unchanged scale map emit no phase,
+    recovery to base capacity emits a scalar 1.0 phase, and a chain
+    starting degraded emits its phase at t=0."""
+    edges = ((0, 1), (1, 2))
+    # Deterministic chain: degraded at t=0, recovers at step 1, stays.
+    model = MarkovLinkModel(
+        edges=edges, scales=(1.0, 0.25),
+        transition=((1.0, 0.0), (1.0, 0.0)), initial=1,
+    )
+    sto = StochasticScenario(links=(model,), step=10.0, horizon=50.0)
+    r = sto.sample(123)
+    assert r.capacity_phases == (
+        CapacityPhase(start=0.0, scale={(0, 1): 0.25, (1, 2): 0.25}),
+        CapacityPhase(start=10.0, scale=1.0),
+    )
+
+
+def test_degenerate_one_state_realization_is_trivial():
+    model = MarkovLinkModel(
+        edges=((0, 1),), scales=(1.0,), transition=((1.0,),)
+    )
+    sto = StochasticScenario(links=(model,), step=5.0, horizon=50.0)
+    assert sto.is_trivial
+    for key in (0, 7, 123):
+        assert sto.sample(key).is_trivial
+
+
+def test_correlated_outages_share_the_shock():
+    """With group_prob=1, every group sags at the same boundaries —
+    outages are correlated, not independent."""
+    g1, g2 = ((0, 1),), ((2, 3),)
+    sto = StochasticScenario(
+        outages=CorrelatedOutages(
+            groups=(g1, g2), shock_prob=0.5, group_prob=1.0,
+            duration_steps=1, scale=0.1,
+        ),
+        step=1.0, horizon=20.0,
+    )
+    r = sto.sample(3)
+    assert r.capacity_phases  # some shock fired in 20 fair coin flips
+    for ph in r.capacity_phases:
+        if isinstance(ph.scale, dict):
+            # Both groups always sag together.
+            assert set(ph.scale) == {(0, 1), (2, 3)}
+
+
+def test_base_scenario_events_ride_along_and_phases_rejected():
+    base = Scenario(churn=(ChurnEvent(agent=1, time=7.0),))
+    sto = StochasticScenario(
+        links=(MarkovLinkModel(
+            edges=((0, 1),), scales=(1.0,), transition=((1.0,),)
+        ),),
+        step=5.0, horizon=20.0, base=base,
+    )
+    assert sto.sample(0).churn == base.churn
+    with pytest.raises(ValueError, match="capacity phases"):
+        StochasticScenario(
+            links=(), step=5.0, horizon=20.0,
+            base=Scenario(capacity_phases=(
+                CapacityPhase(start=1.0, scale=0.5),
+            )),
+        ).sample(0)
+
+
+def test_validation_rejects_bad_models():
+    with pytest.raises(ValueError, match="sum to 1"):
+        MarkovLinkModel(
+            edges=((0, 1),), scales=(1.0, 0.5),
+            transition=((0.5, 0.4), (0.5, 0.5)),
+        ).validate()
+    with pytest.raises(ValueError, match="positive"):
+        MarkovLinkModel(
+            edges=((0, 1),), scales=(0.0,), transition=((1.0,),)
+        ).validate()
+    with pytest.raises(ValueError, match="initial"):
+        MarkovLinkModel(
+            edges=((0, 1),), scales=(1.0,), transition=((1.0,),), initial=2
+        ).validate()
+    with pytest.raises(ValueError, match="shock_prob"):
+        CorrelatedOutages(groups=(((0, 1),),), shock_prob=1.5).validate()
+    with pytest.raises(ValueError, match="horizon"):
+        StochasticScenario(step=10.0, horizon=5.0).sample(0)
+    with pytest.raises(ValueError, match="churn_agents"):
+        StochasticScenario(
+            step=1.0, horizon=10.0, churn_hazard=0.5
+        ).sample(0)
+
+
+# ---------------------------------------------------------------------------
+# Online re-routing: degeneracy and carryover awareness
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40), m=st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_online_degenerate_one_state_is_static_route_bitwise(seed, m):
+    """Regression/property: online re-routing under a degenerate
+    one-state Markov process is bitwise-identical to static route() —
+    the stochastic mirror of PR 3's trivial-scenario property."""
+    _, ov, cats, demands = _instance(seed, m)
+    static = route(demands, cats, 1e6, m, milp_var_budget=0, seed=seed)
+    sto = StochasticScenario(
+        links=(MarkovLinkModel(
+            edges=((0, 1),), scales=(1.0,), transition=((1.0,),)
+        ),),
+        step=5.0, horizon=50.0,
+    )
+    realization = sto.sample(seed)
+    online = route_time_expanded(
+        demands, cats, realization, 1e6, m, milp_var_budget=0, seed=seed,
+        online=True, overlay=ov,
+    )
+    assert online.num_segments == 1
+    assert online.boundaries == (0.0,)
+    assert online.solutions[0].trees == static.trees
+    assert online.solutions[0].completion_time == static.completion_time
+    assert online.metadata["reroutes"] == 0
+
+
+def test_online_requires_overlay():
+    _, _, cats, demands = _instance(0, 4)
+    with pytest.raises(ValueError, match="overlay"):
+        route_time_expanded(
+            demands, cats, Scenario(), 1e6, 4, milp_var_budget=0,
+            online=True,
+        )
+
+
+def test_online_keeps_nearly_finished_transfer():
+    """Carryover awareness: when a late degradation arrives after most
+    volume has shipped, the online router must NOT abandon the in-flight
+    tree — the restart cost exceeds the remaining-volume cost — even
+    though the full-volume closed form (the offline swap guard's
+    objective) prefers the re-route. Hand-computed on a triangle."""
+    import networkx as nx
+
+    from repro.net import MulticastDemand
+    from repro.net.topology import Underlay
+
+    g = nx.Graph()
+    for e in ((0, 1), (1, 2), (0, 2)):
+        g.add_edge(*e, capacity=125_000.0)
+    ov = build_overlay(Underlay(graph=g), [0, 1, 2])
+    cats = compute_categories(ov)
+    demands = (MulticastDemand(0, frozenset({1}), 1e6),)
+    static = route(demands, cats, 1e6, 3, milp_var_budget=0)
+    assert static.trees == (frozenset({(0, 1)}),)  # direct: 8 s
+    # At t=6 (75% shipped, 250 kB left) the 0-1 edge sags 3×.
+    #   keep:   250 kB at 41.67 kB/s  → 6 s more  (finish t=12)
+    #   switch: full 1 MB restart via 0→2→1 → 8 s (finish t=14)
+    # Full-volume closed form says switch (8 s < 24 s); carryover says
+    # keep (6 s < 8 s) — and keep is what actually wins.
+    sc = Scenario(capacity_phases=(
+        CapacityPhase(start=6.0, scale={(0, 1): 1 / 3}),
+    ))
+    online = route_time_expanded(
+        demands, cats, sc, 1e6, 3, milp_var_budget=0, online=True,
+        overlay=ov, base_solution=static,
+    )
+    assert online.num_segments == 2
+    assert online.solutions[1].trees == static.trees, (
+        "online router abandoned a 75%-complete transfer"
+    )
+    assert online.metadata["reroutes"] == 0
+    offline = route_time_expanded(
+        demands, cats, sc, 1e6, 3, milp_var_budget=0,
+        base_solution=static,
+    )
+    assert offline.metadata["reroutes"] == 1  # the myopic guard swaps
+    s_online = simulate_phased(online, ov, scenario=sc)
+    s_offline = simulate_phased(offline, ov, scenario=sc)
+    assert s_online.makespan == pytest.approx(12.0)
+    assert s_offline.makespan == pytest.approx(14.0)
+    assert s_online.makespan < s_offline.makespan
+
+
+def test_online_never_loses_to_static_on_persistent_markov():
+    """The benchmark gate in miniature: persistent Markov degradation of
+    mid-path hops; the online schedule's simulated makespan is <= the
+    static schedule's on every sampled realization."""
+    u = random_geometric_underlay(25, radius=0.35, seed=2)
+    m = 6
+    ov = build_overlay(u, list(u.graph.nodes)[:m])
+    cats = compute_categories(ov)
+    links = sorted({(min(i, (i + 1) % m), max(i, (i + 1) % m))
+                    for i in range(m)})
+    demands = demands_from_links(links, 1e6, m)
+    static = route(demands, cats, 1e6, m, milp_var_budget=0, seed=0)
+    edges = _mid_path_edges(ov, links[:3])
+    if not edges:
+        pytest.skip("degenerate instance: no mid-path hops to degrade")
+    tau = static.completion_time
+    sto = StochasticScenario(
+        links=(_two_state(edges, stay_good=0.8, stay_bad=0.95),),
+        step=0.5 * tau, horizon=8 * tau,
+    )
+    for key in range(4):
+        realization = sto.sample(key)
+        s_static = simulate(static, ov, scenario=realization)
+        online = route_time_expanded(
+            demands, cats, realization, 1e6, m, milp_var_budget=0,
+            seed=0, online=True, overlay=ov, base_solution=static,
+        )
+        s_online = simulate_phased(online, ov, scenario=realization)
+        assert s_online.makespan <= s_static.makespan + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Carryover snapshots (what the online router observes)
+# ---------------------------------------------------------------------------
+
+
+def test_carryover_state_exact_on_line():
+    """Hand-computed snapshot: 1 MB over a 125 kB/s link, stopped at
+    t=3 → 625 kB remaining; at t=10 → done at 8 s."""
+    from repro.net import line_underlay, route_direct
+
+    u = line_underlay(2)
+    ov = build_overlay(u, [0, 1])
+    cats = compute_categories(ov)
+    demands = demands_from_links([(0, 1)], 1e6, 2)[:1]
+    sol = route_direct(demands, cats, 1e6)
+    phased = PhasedRoutingSolution(
+        demands=tuple(demands), boundaries=(0.0,), solutions=(sol,),
+        completion_time=8.0, method="static", solve_seconds=0.0,
+    )
+    mid = carryover_state(phased, ov, 3.0)
+    assert mid.time == pytest.approx(3.0)
+    assert mid.remaining == {(0, 0, 1): pytest.approx(625_000.0)}
+    assert mid.done == {}
+    assert math.isnan(mid.flow_done[0])
+    end = carryover_state(phased, ov, 10.0)
+    assert end.remaining == {}
+    assert end.done == {(0, 0, 1): pytest.approx(8.0)}
+    assert end.flow_done[0] == pytest.approx(8.0)
+    fresh = carryover_state(phased, ov, 0.0)
+    assert fresh.remaining == {} and fresh.done == {}
+    assert math.isnan(fresh.flow_done[0])
+
+
+def test_carryover_snapshot_applies_no_future_conditions():
+    """No lookahead: a capacity phase starting exactly at the snapshot
+    instant (or later) must not affect the observed state."""
+    from repro.net import line_underlay, route_direct
+
+    u = line_underlay(2)
+    ov = build_overlay(u, [0, 1])
+    cats = compute_categories(ov)
+    demands = demands_from_links([(0, 1)], 1e6, 2)[:1]
+    sol = route_direct(demands, cats, 1e6)
+    phased = PhasedRoutingSolution(
+        demands=tuple(demands), boundaries=(0.0,), solutions=(sol,),
+        completion_time=8.0, method="static", solve_seconds=0.0,
+    )
+    future = Scenario(capacity_phases=(
+        CapacityPhase(start=4.0, scale=0.01),
+    ))
+    snap = carryover_state(phased, ov, 4.0, scenario=future)
+    clean = carryover_state(phased, ov, 4.0)
+    assert snap.remaining == clean.remaining
+
+
+def test_carryover_objective_charges_restart():
+    """_carryover_completion_time: keeping in-flight trees prices the
+    remainder; switching to fresh links prices the full restart."""
+    from repro.net import line_underlay, route_direct
+
+    u = line_underlay(3)
+    ov = build_overlay(u, [0, 1, 2])
+    cats = compute_categories(ov)
+    demands = demands_from_links([(0, 1)], 1e6, 3)[:1]
+    sol = route_direct(demands, cats, 1e6)
+    phased = PhasedRoutingSolution(
+        demands=tuple(demands), boundaries=(0.0,), solutions=(sol,),
+        completion_time=8.0, method="static", solve_seconds=0.0,
+    )
+    state = carryover_state(phased, ov, 6.0)  # 250 kB left of 1 MB
+    keep = _carryover_completion_time(
+        (frozenset({(0, 1)}),), demands, cats, state
+    )
+    switch = _carryover_completion_time(
+        (frozenset({(0, 2), (2, 1)}),), demands, cats, state
+    )
+    assert keep == pytest.approx(2.0)  # 250 kB at 125 kB/s
+    assert switch == pytest.approx(8.0)  # full 1 MB restart
+    # A finished flow carries nothing on any trees.
+    done = carryover_state(phased, ov, 20.0)
+    assert _carryover_completion_time(
+        (frozenset({(0, 2), (2, 1)}),), demands, cats, done
+    ) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Designer wiring (seeded expectation)
+# ---------------------------------------------------------------------------
+
+
+def test_designer_stochastic_expectation(roofnet_overlay, roofnet_categories):
+    from repro.core import ConvergenceConstants, design
+
+    ov = roofnet_overlay
+    edges = _mid_path_edges(ov, [(0, 1), (1, 2), (2, 3)])
+    sto = StochasticScenario(
+        links=(_two_state(edges, stay_good=0.8, stay_bad=0.95),),
+        step=700.0, horizon=10_000.0,
+    )
+    kwargs = dict(
+        overlay=ov, constants=ConvergenceConstants(epsilon=0.05),
+        stochastic=sto, stochastic_rollouts=3, milp_time_limit=5.0,
+        reroute_per_phase=True,
+    )
+    out = design("ring", roofnet_categories, 94.47e6, 10, **kwargs)
+    assert len(out.tau_samples) == 3
+    assert out.tau == out.tau_mean == pytest.approx(
+        float(np.mean(out.tau_samples))
+    )
+    assert out.tau_p95 == pytest.approx(
+        float(np.percentile(out.tau_samples, 95.0))
+    )
+    assert out.total_time == out.tau_mean * out.iterations_to_eps
+    # Online deployment never loses to the static schedule in expectation
+    # on the persistent regime.
+    assert out.tau_phased <= out.tau_static_sched + 1e-9
+    # Same seed => identical samples (reproducible expectation).
+    again = design("ring", roofnet_categories, 94.47e6, 10, **kwargs)
+    assert again.tau_samples == out.tau_samples
+
+
+def test_designer_rejects_scenario_plus_stochastic(
+    roofnet_overlay, roofnet_categories
+):
+    from repro.core import design
+
+    sto = StochasticScenario(step=1.0, horizon=10.0)
+    with pytest.raises(ValueError, match="not both"):
+        design(
+            "ring", roofnet_categories, 1e6, 10, overlay=roofnet_overlay,
+            scenario=Scenario(), stochastic=sto,
+        )
+    with pytest.raises(ValueError, match="overlay"):
+        design("ring", roofnet_categories, 1e6, 10, stochastic=sto)

@@ -1,0 +1,155 @@
+"""Nightly benchmark-trend gate (`benchmarks/trend.py`) on fabricated
+JSON-lines files: regression detection, direction inference, the
+looser wall-clock threshold, and the first-run (no baseline) pass."""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+_TREND_PATH = (
+    pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "trend.py"
+)
+_spec = importlib.util.spec_from_file_location("_trend", _TREND_PATH)
+trend = importlib.util.module_from_spec(_spec)
+sys.modules["_trend"] = trend  # dataclasses resolve via sys.modules
+_spec.loader.exec_module(trend)
+
+
+def _write(path, records):
+    with open(path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    return str(path)
+
+
+def _rec(name, us=1000.0, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived,
+            "timestamp": "2026-07-29T00:00:00+00:00"}
+
+
+def test_first_run_without_baseline_passes(tmp_path, capsys):
+    cur = _write(tmp_path / "cur.jsonl", [_rec("sim_scale")])
+    assert trend.main([str(tmp_path / "missing.jsonl"), cur]) == 0
+    assert "no baseline" in capsys.readouterr().out
+
+
+def test_derived_regression_over_10pct_fails(tmp_path, capsys):
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("phase_routing", derived="makespan_phased_s=3136.0;win=4.20x"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [
+        # makespan (lower-better) +12% and win (higher-better) -15%:
+        # both are >10% regressions.
+        _rec("phase_routing", derived="makespan_phased_s=3512.3;win=3.57x"),
+    ])
+    assert trend.main([base, cur]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "makespan_phased_s" in out
+    assert "win" in out
+
+
+def test_within_threshold_passes(tmp_path, capsys):
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("phase_routing", derived="makespan_phased_s=3136.0;win=4.20x"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [
+        # makespan +5%, win +2%: inside the 10% gate.
+        _rec("phase_routing", derived="makespan_phased_s=3292.8;win=4.28x"),
+    ])
+    assert trend.main([base, cur]) == 0
+    assert "no regressions" in capsys.readouterr().out
+
+
+def test_improvements_never_fail(tmp_path):
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("sim_scale", us=2000.0, derived="speedup=20.0x"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [
+        # 2x faster wall-clock AND 3x better speedup.
+        _rec("sim_scale", us=1000.0, derived="speedup=60.0x"),
+    ])
+    assert trend.main([base, cur]) == 0
+
+
+def test_wallclock_uses_looser_threshold(tmp_path):
+    base = [_rec("route_scale", us=1000.0)]
+    # +30% wall clock: runner jitter, tolerated by the 50% time gate.
+    cur_ok = [_rec("route_scale", us=1300.0)]
+    # 10x wall clock: a real regression even for a noisy runner.
+    cur_bad = [_rec("route_scale", us=10_000.0)]
+    b = _write(tmp_path / "b.jsonl", base)
+    assert trend.main([b, _write(tmp_path / "ok.jsonl", cur_ok)]) == 0
+    assert trend.main([b, _write(tmp_path / "bad.jsonl", cur_bad)]) == 1
+
+
+def test_new_and_removed_benchmarks_never_fail(tmp_path, capsys):
+    base = _write(tmp_path / "base.jsonl", [_rec("old_bench")])
+    cur = _write(tmp_path / "cur.jsonl", [_rec("brand_new")])
+    assert trend.main([base, cur]) == 0
+    out = capsys.readouterr().out
+    assert "brand_new" in out and "old_bench" in out
+
+
+def test_latest_record_per_name_wins(tmp_path):
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("g", derived="tau_s=100.0"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [
+        _rec("g", derived="tau_s=500.0"),  # superseded by the re-run
+        _rec("g", derived="tau_s=101.0"),
+    ])
+    assert trend.main([base, cur]) == 0
+
+
+def test_direction_inference():
+    assert trend.higher_is_better("win")
+    assert trend.higher_is_better("speedup")
+    assert trend.higher_is_better("batched_speedup")
+    assert not trend.higher_is_better("makespan_phased_s")
+    assert not trend.higher_is_better("us_per_call")
+    assert not trend.higher_is_better("rel_err")
+
+
+def test_wallclock_classification():
+    """Measured timings (and ratios of timings) get the loose gate;
+    simulated durations ('_s'), counts, and wins stay on the tight one."""
+    for key in ("us_per_call", "big_seconds", "sweep500_seconds",
+                "speedup", "batched_speedup"):
+        assert trend.is_wallclock(key), key
+    for key in ("makespan_phased_s", "mean_online_s", "p95_online_s",
+                "win", "reroutes", "rel_err", "branches"):
+        assert not trend.is_wallclock(key), key
+
+
+def test_wallclock_derived_metric_tolerates_jitter(tmp_path):
+    """A measured-timing derived metric (e.g. sim_scale's wall-clock
+    speedup) must not red the night on runner jitter — only collapses
+    beyond the time threshold fail."""
+    base = _write(tmp_path / "b.jsonl", [
+        _rec("sim_scale", derived="speedup=35.0x;big_seconds=4.00"),
+    ])
+    jitter = _write(tmp_path / "j.jsonl", [
+        # speedup -20%, big_seconds +30%: both inside the 50% time gate.
+        _rec("sim_scale", derived="speedup=28.0x;big_seconds=5.20"),
+    ])
+    collapse = _write(tmp_path / "c.jsonl", [
+        _rec("sim_scale", derived="speedup=10.0x;big_seconds=4.00"),
+    ])
+    assert trend.main([base, jitter]) == 0
+    assert trend.main([base, collapse]) == 1
+
+
+def test_parse_derived_tolerates_junk():
+    got = trend.parse_derived(
+        "win=4.20x;label=heuristic;count=17;empty;=;x=1e-3"
+    )
+    assert got == {"win": 4.20, "count": 17.0, "x": 1e-3}
+
+
+def test_torn_tail_line_tolerated(tmp_path):
+    path = tmp_path / "torn.jsonl"
+    with open(path, "w") as f:
+        f.write(json.dumps(_rec("a")) + "\n")
+        f.write('{"name": "b", "us_per')  # interrupted writer
+    assert set(trend.load_records(str(path))) == {"a"}

@@ -9,6 +9,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        design_scale,
         engine_parity,
         fig4_fmmd_variants,
         fig5_training,
@@ -34,6 +35,7 @@ def main() -> None:
         "phase_routing": phase_routing.main,
         "stochastic_routing": stochastic_routing.main,
         "engine_parity": engine_parity.main,
+        "design_scale": design_scale.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

@@ -25,6 +25,14 @@ new benchmark has no baseline, and a removed one is a code change, not
 a regression. A missing baseline *file* (the very first run, or the
 previous run predates artifact upload) passes with a notice.
 
+``compare`` only diffs metrics present in *both* records, so a metric
+(or whole benchmark) that silently stops being emitted would otherwise
+vanish from the gate without a trace — a benchmark that loses its
+headline metric looks permanently green. Vanished benchmarks and
+vanished per-benchmark metrics are therefore listed explicitly in the
+output (a notice, not a failure: removal is a code change the PR diff
+shows, not a nightly regression — but it must be *visible*).
+
 Stdlib-only on purpose: the trend job runs without installing the repo.
 
 Usage:  python benchmarks/trend.py BASELINE.jsonl CURRENT.jsonl
@@ -127,6 +135,25 @@ def metrics_of(rec: dict) -> dict[str, float]:
     return out
 
 
+def vanished_metrics(
+    baseline: dict[str, dict], current: dict[str, dict]
+) -> list[str]:
+    """``bench.metric`` entries present in the baseline record but
+    missing from the current record of a benchmark that still ran —
+    metrics the gate can no longer see (``compare`` iterates current
+    metrics only)."""
+    gone: list[str] = []
+    for name in sorted(current):
+        base_rec = baseline.get(name)
+        if base_rec is None:
+            continue
+        missing = sorted(
+            set(metrics_of(base_rec)) - set(metrics_of(current[name]))
+        )
+        gone.extend(f"{name}.{key}" for key in missing)
+    return gone
+
+
 def compare(
     baseline: dict[str, dict],
     current: dict[str, dict],
@@ -213,11 +240,20 @@ def main(argv: list[str] | None = None) -> int:
     )
     new = sorted(set(current) - set(baseline))
     gone = sorted(set(baseline) - set(current))
+    lost = vanished_metrics(baseline, current)
     print(format_table(deltas))
     if new:
         print(f"new benchmarks (no baseline yet): {', '.join(new)}")
     if gone:
-        print(f"benchmarks absent from this run: {', '.join(gone)}")
+        print(
+            "benchmarks absent from this run (their metrics are no "
+            f"longer gated): {', '.join(gone)}"
+        )
+    if lost:
+        print(
+            "metrics present in the baseline but missing from this run "
+            f"(no longer gated): {', '.join(lost)}"
+        )
 
     regressions = [d for d in deltas if d.regressed]
     if regressions:

@@ -16,7 +16,7 @@ knob trading per-iteration cost against convergence speed.
 from __future__ import annotations
 
 import dataclasses
-from typing import MutableMapping, Sequence
+from typing import Mapping, MutableMapping, Sequence
 
 import numpy as np
 
@@ -81,6 +81,35 @@ class DesignOutcome:
         return self.design.variant
 
 
+def _check_per_edge_scalable(categories: Categories, scenario) -> None:
+    """Fail fast — with the fix — when phase-adaptive routing would need
+    per-edge capacity scaling that the categories cannot provide.
+
+    ``Categories.scaled`` with a per-edge ``CapacityPhase`` scale
+    re-derives C_F from ground-truth member edges and edge capacities;
+    inferred categories (``infer_categories``) withhold both, so the
+    deep scaling call would raise an unactionable ``ValueError`` from
+    inside the routing stack. Catch it at the designer level instead.
+    """
+    if scenario is None or not getattr(scenario, "capacity_phases", ()):
+        return
+    if categories.edge_capacity is not None and all(
+        categories.members.values()
+    ):
+        return
+    if any(
+        isinstance(ph.scale, Mapping) for ph in scenario.capacity_phases
+    ):
+        raise ValueError(
+            "reroute_per_phase with per-edge CapacityPhase scales needs "
+            "ground-truth categories: these categories have no member "
+            "edges / edge capacities (infer_categories withholds them), "
+            "so Categories.scaled cannot re-derive the per-phase C_F. "
+            "Either build the categories with compute_categories(overlay) "
+            "or restrict the scenario to scalar phase scales."
+        )
+
+
 def evaluate_design(
     design: FMMDResult,
     categories: Categories,
@@ -119,7 +148,11 @@ def evaluate_design(
     ``tau_static_sched``/``tau_phased`` (with the simulations in
     ``sim``/``sim_phased`` and the schedule in ``phased_routing``), and
     the design is priced at the better of the two — the schedule an
-    operator would actually deploy. Requires ``optimize_routing``.
+    operator would actually deploy. Requires ``optimize_routing``, and —
+    when the scenario's phases carry *per-edge* scale maps — categories
+    with ground-truth members/edge capacities (``compute_categories``;
+    inferred categories fail fast here with the fix spelled out rather
+    than deep inside ``Categories.scaled``).
 
     ``stochastic`` (a ``StochasticScenario``) prices the design as a
     *seeded expectation*: ``stochastic_rollouts`` realizations are drawn
@@ -155,6 +188,8 @@ def evaluate_design(
             "reroute_per_phase re-optimizes routing per capacity phase; "
             "it requires optimize_routing=True"
         )
+    if reroute_per_phase:
+        _check_per_edge_scalable(categories, scenario)
     links = design.activated_links
     demands = demands_from_links(links, kappa, num_agents) if links else []
     if demands:
@@ -209,6 +244,7 @@ def evaluate_design(
             sim = simulate(sol, overlay, scenario=realization)
             static_samples.append(_priced_tau(sim))
             if reroute_per_phase and realization.capacity_phases:
+                _check_per_edge_scalable(categories, realization)
                 # The deployed policy: online re-routing from observed
                 # state at every realized phase boundary.
                 phased = route_time_expanded(
@@ -259,7 +295,9 @@ def evaluate_design(
         design=design,
         routing=sol,
         tau=tau,
-        tau_bar=_tau_bar(frozenset(links), categories, kappa),
+        tau_bar=_tau_bar(
+            frozenset(links), categories, kappa, incidence=incidence
+        ),
         rho=rho_v,
         iterations_to_eps=k_eps,
         total_time=tau * k_eps,

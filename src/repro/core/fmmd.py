@@ -43,17 +43,30 @@ class FMMDResult:
 
 
 def _tau_bar(
-    links: frozenset, categories: Categories, kappa: float
+    links: frozenset,
+    categories: Categories,
+    kappa: float,
+    incidence: CategoryIncidence | None = None,
 ) -> float:
     """τ̄(W) of eq. (22): completion time under default-path routing.
 
     ``links`` holds undirected activated links; each contributes both
-    directed unicast flows (i→j and j→i) to its categories.
+    directed unicast flows (i→j and j→i) to its categories. With a
+    matching precompiled ``incidence`` the t_F loads come from CSR
+    slices instead of the O(Σ_F |F|) family iteration — bitwise equal
+    (integer loads are exact in either summation order, and the
+    κ·t_F/C_F max uses the same per-element arithmetic).
     """
     uses = {}
     for (i, j) in links:
         uses[(i, j)] = 1
         uses[(j, i)] = 1
+    if (
+        incidence is not None
+        and incidence.kappa == kappa
+        and incidence.matches(categories)
+    ):
+        return incidence.completion_time(incidence.loads_from_uses(uses))
     return categories.completion_time(uses, kappa)
 
 
@@ -89,6 +102,14 @@ class _PriorityState:
     categories it touches. The per-element arithmetic matches
     ``Categories.completion_time`` bit for bit, so the candidate set —
     down to the reference's 1e-15 tie margin — is unchanged.
+
+    The per-atom maxima are maintained *incrementally*: loads only ever
+    grow (atoms are only selected, never dropped), so every entry's
+    κ·(t_F+δ)/C_F is nondecreasing and a running elementwise max over
+    re-evaluations of just the categories a selection touched equals
+    the full recomputation — making each Frank-Wolfe iteration's filter
+    O(1) Python (one vector max against the current τ̄) instead of a
+    ``maximum.at`` scatter over every (atom, category) pair per step.
     """
 
     def __init__(
@@ -119,6 +140,7 @@ class _PriorityState:
         atoms_arr = np.asarray(
             [(i, j) for i, j in atoms], dtype=np.int64
         ).reshape(-1, 2)
+        self._num_atoms = atoms_arr.shape[0]
         ai, aj = atoms_arr[:, 0], atoms_arr[:, 1]
         cats_f, own_f = _csr_gather(inc.link_ptr, inc.entry_cat, ai * m + aj)
         cats_r, own_r = _csr_gather(inc.link_ptr, inc.entry_cat, aj * m + ai)
@@ -131,13 +153,53 @@ class _PriorityState:
         self.entry_atom = ukey // nf  # atom position per (atom, cat) pair
         self.entry_cat = ukey % nf
         self.entry_delta = counts.astype(np.float64)  # δ ∈ {1, 2}
+        # Category-major CSR over the (atom, cat) entries, so a selection
+        # can re-evaluate exactly the entries of the categories whose
+        # loads it changed.
+        order = np.argsort(self.entry_cat, kind="stable")
+        self._entries_by_cat = order
+        self._cat_ptr = np.concatenate(
+            (
+                np.zeros(1, dtype=np.int64),
+                np.cumsum(
+                    np.bincount(
+                        self.entry_cat, minlength=self.num_categories
+                    ),
+                    dtype=np.int64,
+                ),
+            )
+        )
+        # Running per-atom max of κ·(t_F+δ)/C_F (−inf for category-free
+        # atoms, like the reference table's fill value).
+        self._atom_max = np.full(self._num_atoms, -np.inf)
+        if self.entry_atom.size:
+            np.maximum.at(
+                self._atom_max, self.entry_atom,
+                self.kappa
+                * (self.loads[self.entry_cat] + self.entry_delta)
+                / self.cap[self.entry_cat],
+            )
 
     def select(self, atom: tuple[int, int]) -> None:
         """Account (i, j) and (j, i) loads for a newly selected atom."""
         i, j = atom
         inc, m = self._inc, self._m
-        self.loads[inc.link_categories(i * m + j)] += 1.0
-        self.loads[inc.link_categories(j * m + i)] += 1.0
+        cats_f = inc.link_categories(i * m + j)
+        cats_r = inc.link_categories(j * m + i)
+        self.loads[cats_f] += 1.0
+        self.loads[cats_r] += 1.0
+        touched = np.unique(np.concatenate((cats_f, cats_r)))
+        if not touched.size or not self.entry_atom.size:
+            return
+        pos, _ = _csr_gather(self._cat_ptr, self._entries_by_cat, touched)
+        if pos.size:
+            cats = self.entry_cat[pos]
+            np.maximum.at(
+                self._atom_max, self.entry_atom[pos],
+                self.kappa
+                * (self.loads[cats] + self.entry_delta[pos])
+                / self.cap[cats],
+            )
 
     def current_tau(self) -> float:
         if not self.num_categories:
@@ -146,15 +208,12 @@ class _PriorityState:
 
     def candidate_taus(self, num_atoms: int) -> np.ndarray:
         """τ̄ of the tentative iterate per atom, as one vector op."""
-        tau = np.full(num_atoms, -np.inf)
-        if self.entry_atom.size:
-            np.maximum.at(
-                tau, self.entry_atom,
-                self.kappa
-                * (self.loads[self.entry_cat] + self.entry_delta)
-                / self.cap[self.entry_cat],
+        if num_atoms != self._num_atoms:
+            raise ValueError(
+                f"state was built for {self._num_atoms} atoms, "
+                f"got {num_atoms}"
             )
-        return np.maximum(tau, self.current_tau())
+        return np.maximum(self._atom_max, self.current_tau())
 
 
 def fmmd(
@@ -196,6 +255,14 @@ def fmmd(
         _PriorityState(atoms, m, categories, kappa, incidence=incidence)
         if priority else None
     )
+    # Persistent unselected-atom mask, flipped on selection — replaces
+    # the per-iteration O(|atoms|) ``np.fromiter`` set-membership
+    # rebuild. ``atoms`` may contain duplicate values (caller-supplied
+    # ``allowed_links``): every position of a selected value flips.
+    unsel_mask = np.ones(num_atoms, dtype=bool)
+    atom_positions: dict[tuple[int, int], list[int]] = {}
+    for q, a in enumerate(atoms):
+        atom_positions.setdefault(a, []).append(q)
 
     for k in range(iterations):
         rho_k, grad = mixing.rho_and_gradient(w)  # eq. (18), one eigh
@@ -216,15 +283,11 @@ def fmmd(
             # W^(0), so it is in S(W^(k)) from the start and is excluded —
             # otherwise it would always win (it never increases τ̄) and the
             # algorithm would stall.
-            unsel = np.fromiter(
-                (a not in selected_links for a in atoms), dtype=bool,
-                count=num_atoms,
-            ) if num_atoms else np.zeros(0, dtype=bool)
-            if unsel.any():
+            if unsel_mask.any():
                 taus = np.where(
-                    unsel, prio.candidate_taus(num_atoms), np.inf
+                    unsel_mask, prio.candidate_taus(num_atoms), np.inf
                 )
-                cand_mask = unsel & (taus <= taus.min() + 1e-15)
+                cand_mask = unsel_mask & (taus <= taus.min() + 1e-15)
             # else: every link already activated → full search incl. I
 
         if cand_mask is not None:
@@ -233,15 +296,12 @@ def fmmd(
             atom = atoms[int(np.argmin(scores))]
         else:  # identity first in candidate order: wins score ties
             atom = None
-        s = (
-            np.eye(m)
-            if atom is None
-            else mixing.swapping_matrix(m, atom[0], atom[1])
-        )
-        w = (1.0 - gamma) * w + gamma * s
+        mixing.fw_step(w, gamma, atom)  # W ← (1−γ)W + γS, in place
         selected.append(atom)
         if atom is not None and atom not in selected_links:
             selected_links.add(atom)
+            for q in atom_positions[atom]:
+                unsel_mask[q] = False
             if prio is not None:
                 prio.select(atom)
     rho_final = mixing.rho(w) if iterations > 0 else trajectory[0]

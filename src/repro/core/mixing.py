@@ -104,7 +104,11 @@ def rho_and_gradient(w: np.ndarray) -> tuple[float, np.ndarray]:
     trajectory while following the gradient) would otherwise factor
     W − J twice per iteration — at 500 agents the dominant sweep cost.
     The ρ value may differ from ``rho()`` in the last ulp (LAPACK's
-    with-vectors driver vs. values-only).
+    with-vectors driver vs. values-only). LAPACK's subset drivers
+    (dsyevr/dsyevx IL=IU) were evaluated for the extreme pair and
+    rejected: on the heavily clustered spectra of early Frank-Wolfe
+    iterates they can return an *empty* subset at the degenerate end,
+    and on dense-spectrum iterates the saving over dsyevd is <1.3×.
     """
     m = w.shape[0]
     eigs, vecs = np.linalg.eigh(w - ideal_matrix(m))
@@ -112,6 +116,33 @@ def rho_and_gradient(w: np.ndarray) -> tuple[float, np.ndarray]:
     v = vecs[:, k]
     grad = math.copysign(1.0, eigs[k]) * np.outer(v, v)
     return float(np.abs(eigs[k])), grad
+
+
+def fw_step(
+    w: np.ndarray, gamma: float, atom: tuple[int, int] | None
+) -> None:
+    """In-place Frank-Wolfe update W ← (1−γ)·W + γ·S^(atom).
+
+    Bitwise-identical to forming the atom densely (``swapping_matrix``
+    or I) and evaluating ``(1−γ)·W + γ·S`` — without the two O(m²)
+    temporaries per step: entries where S is zero see ``(1−γ)·w + γ·0``,
+    an exact no-op on the nonnegative FW iterates; the diagonal adds
+    ``γ·1`` with the same two flops; and for a swapping atom the
+    (i,i)/(j,j) entries are restored to their pure scaled values while
+    (i,j)/(j,i) gain γ.
+    """
+    w *= 1.0 - gamma
+    diag = np.einsum("ii->i", w)
+    if atom is None:  # identity atom
+        diag += gamma
+        return
+    i, j = atom
+    sii, sjj = w[i, i], w[j, j]
+    diag += gamma
+    w[i, i] = sii
+    w[j, j] = sjj
+    w[i, j] += gamma
+    w[j, i] += gamma
 
 
 @dataclasses.dataclass(frozen=True)

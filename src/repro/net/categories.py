@@ -23,11 +23,33 @@ Two access paths:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Mapping
 
 import numpy as np
 
 from repro.net.topology import OverlayNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class _FlatCategories:
+    """Precompiled link×category CSR structure riding along a
+    ``Categories`` built by the vectorized ``compute_categories``.
+
+    Exactly the capacity-independent half of a ``CategoryIncidence`` —
+    entries sorted by (dense link id ``i·m + j``, family index) with the
+    bincount-cumsum ``link_ptr`` — so ``compile_category_incidence``
+    only has to assemble the capacity vector and κ/C_F coefficients
+    (the ``CategoryIncidence.rescaled`` pattern, applied at compile
+    time: structure shared, coefficients rebuilt). Capacity-independent,
+    hence ``Categories.scaled`` propagates it unchanged.
+    """
+
+    num_agents: int
+    num_categories: int
+    entry_link: np.ndarray  # [nnz] dense link id i·m + j, link-major
+    entry_cat: np.ndarray  # [nnz] family index per entry
+    link_ptr: np.ndarray  # [m²+1] CSR slices per link id
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +69,12 @@ class Categories:
     members: Mapping[frozenset, tuple[tuple[int, int], ...]]
     capacity: Mapping[frozenset, float]
     edge_capacity: Mapping[tuple[int, int], float] | None = None
+    # Private acceleration payload (see _FlatCategories); never part of
+    # equality — two Categories with the same mappings are the same
+    # categories whether or not one carries the arrays.
+    flat: _FlatCategories | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def families(self) -> tuple[frozenset, ...]:
@@ -101,6 +129,7 @@ class Categories:
                     {e: c * f for e, c in self.edge_capacity.items()}
                     if self.edge_capacity is not None else None
                 ),
+                flat=self.flat,  # family structure is unchanged
             )
         if self.edge_capacity is None or not all(self.members.values()):
             raise ValueError(
@@ -124,6 +153,7 @@ class Categories:
             edge_capacity={
                 e: c * factor(e) for e, c in self.edge_capacity.items()
             },
+            flat=self.flat,  # family structure is unchanged
         )
 
 
@@ -229,13 +259,15 @@ class CategoryIncidence:
         )
 
 
-def compile_category_incidence(
+def _compile_category_incidence_reference(
     categories: Categories, num_agents: int, kappa: float
 ) -> CategoryIncidence:
-    """Build the flat link×category entry arrays for ``categories``.
+    """Per-link Python-append compiler (retained ground truth).
 
-    Entries are sorted by dense link id with a stable sort, so the
-    within-link category order equals the ``families`` iteration order.
+    The original implementation: iterate every family's frozenset,
+    append dense link ids, stable-sort by link. The vectorized
+    ``compile_category_incidence`` is property-tested bitwise-identical
+    to this on the same ``Categories``.
     """
     m = num_agents
     fams = categories.families
@@ -267,11 +299,55 @@ def compile_category_incidence(
     )
 
 
-def compute_categories(overlay: OverlayNetwork) -> Categories:
-    """Ground-truth categories from full knowledge of the underlay.
+def compile_category_incidence(
+    categories: Categories, num_agents: int, kappa: float
+) -> CategoryIncidence:
+    """Build the flat link×category entry arrays for ``categories``.
 
-    For every directed underlay edge, collect the set of directed overlay
-    links routed over it; group edges by that set.
+    Entries are sorted by (dense link id, family index) — exactly the
+    order the reference's stable by-link sort of its family-major append
+    sequence produces, since each (link, family) pair occurs at most
+    once. When ``categories`` carries the ``_FlatCategories`` payload
+    (the vectorized ``compute_categories`` output, propagated through
+    ``Categories.scaled``), the entry arrays come straight from it with
+    no per-link Python; otherwise this falls back to the retained
+    reference loop. ``link_ptr`` is a bincount+cumsum CSR pointer —
+    identical to (and cheaper than) the reference's O(m² log nnz)
+    ``searchsorted`` scan over every dense link id.
+    """
+    m = num_agents
+    fams = categories.families
+    flat = categories.flat
+    if (
+        flat is None
+        or flat.num_agents != m
+        or flat.num_categories != len(fams)
+    ):
+        return _compile_category_incidence_reference(
+            categories, num_agents, kappa
+        )
+    cap = np.array([categories.capacity[F] for F in fams], dtype=np.float64)
+    cat = flat.entry_cat
+    coef = kappa / cap
+    return CategoryIncidence(
+        num_agents=m,
+        kappa=kappa,
+        capacity=cap,
+        entry_link=flat.entry_link,
+        entry_cat=cat,
+        entry_coef=coef[cat] if cat.size else np.empty(0),
+        link_ptr=flat.link_ptr,
+        source=categories,
+    )
+
+
+def _compute_categories_reference(overlay: OverlayNetwork) -> Categories:
+    """Dict-of-set grouping (retained ground truth).
+
+    The original per-(link, hop) Python loop. The vectorized
+    ``compute_categories`` is property-tested bitwise-identical to this:
+    same family keys in the same order, same member-edge order, same
+    capacities.
     """
     edge_to_links: dict[tuple[int, int], set] = {}
     for i, j in overlay.directed_overlay_links:
@@ -295,6 +371,146 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
     )
 
 
+def compute_categories(overlay: OverlayNetwork) -> Categories:
+    """Ground-truth categories from full knowledge of the underlay.
+
+    For every directed underlay edge, collect the set of directed overlay
+    links routed over it; group edges by that set.
+
+    Vectorized: all (overlay-link, underlay-edge) incidence pairs come
+    from one ``OverlayNetwork.batched_path_edges`` call as flat int
+    arrays, one fused-key sort groups them per directed edge (links
+    ascending within each edge), and edges sharing a link-set signature
+    — compared as the sorted-id byte string, which is set equality —
+    collapse into one family. Ordering is reproduced exactly: edges are
+    ranked by their first traversal (``min`` rank per edge), families by
+    their first edge, matching the reference's dict insertion orders, so
+    the result is bitwise-identical to ``_compute_categories_reference``
+    (property-tested) including family-key iteration order. The result
+    carries the ``_FlatCategories`` payload that lets
+    ``compile_category_incidence`` skip its Python loop.
+    """
+    m = overlay.num_agents
+    # The array path encodes node ids into int64 edge codes; anything
+    # outside nonnegative machine ints must take the reference path
+    # *before* the arrays are built — np.asarray(dtype=int64) would
+    # truncate float ids silently and huge ids would overflow
+    # ``u · n_nodes + v``, surfacing later as a bogus-edge KeyError (or,
+    # worse, a silent collision) instead of an importable error.
+    if not all(
+        isinstance(n, (int, np.integer)) and 0 <= int(n) <= 2**31 - 1
+        for n in overlay.underlay.graph.nodes
+    ):
+        return _compute_categories_reference(overlay)
+    link_arr, eu, ev, rank = overlay.batched_path_edges()
+    if not link_arr.size:
+        return Categories(members={}, capacity={}, edge_capacity={})
+    n_nodes = int(max(eu.max(), ev.max())) + 1
+    code = eu * n_nodes + ev
+    num_links = m * (m - 1)
+    # Sort once by (edge, link); keys are unique after fusing, so the
+    # default sort is deterministic. Pairs may repeat only for
+    # non-simple hand-built paths; a unique pass collapses them (min
+    # rank kept).
+    if code.max() <= (2**62) // max(num_links, 1):
+        order = np.argsort(code * num_links + link_arr)
+    else:  # fused key would overflow int64: two-key lexsort
+        order = np.lexsort((link_arr, code))
+    code_s, link_s, rank_s = code[order], link_arr[order], rank[order]
+    keep = np.ones(code_s.size, dtype=bool)
+    keep[1:] = (code_s[1:] != code_s[:-1]) | (link_s[1:] != link_s[:-1])
+    if not keep.all():
+        first = np.flatnonzero(keep)
+        seg_min = np.minimum.reduceat(rank_s, first)
+        code_s, link_s, rank_s = code_s[first], link_s[first], seg_min
+    # Segment per directed edge; edges ordered by first traversal.
+    starts = np.flatnonzero(
+        np.concatenate(([True], code_s[1:] != code_s[:-1]))
+    )
+    ends = np.concatenate((starts[1:], [code_s.size]))
+    edge_order = np.argsort(np.minimum.reduceat(rank_s, starts))
+
+    # Decode directed-link ids (i·(m−1) + j − [j>i]) to shared tuples:
+    # itertools.product emits exactly the i-major (i, j) order with the
+    # diagonal, which one object-array mask removes.
+    grid = np.empty(m * m, dtype=object)
+    grid[:] = list(itertools.product(range(m), repeat=2))
+    link_obj = grid[~np.eye(m, dtype=bool).ravel()]
+    cap_of = overlay.underlay.capacity
+    # Per unique directed edge (in sorted-segment position): node pair
+    # as Python ints, decoded in one vector pass.
+    seg_code = code_s[starts]
+    seg_u = (seg_code // n_nodes).tolist()
+    seg_v = (seg_code % n_nodes).tolist()
+    starts_l, ends_l = starts.tolist(), ends.tolist()
+
+    fam_of_sig: dict[bytes, int] = {}
+    fam_keys: list[frozenset] = []
+    fam_members: list[list] = []
+    fam_cap: list[float] = []
+    fam_ids: list[np.ndarray] = []
+    edge_capacity: dict[tuple[int, int], float] = {}
+    for pos in edge_order.tolist():
+        ids = link_s[starts_l[pos]:ends_l[pos]]
+        sig = ids.tobytes()
+        fi = fam_of_sig.get(sig)
+        if fi is None:
+            fi = len(fam_keys)
+            fam_of_sig[sig] = fi
+            fam_keys.append(frozenset(link_obj[ids].tolist()))
+            fam_members.append([])
+            fam_cap.append(np.inf)
+            fam_ids.append(ids)
+        edge = (seg_u[pos], seg_v[pos])
+        cval = cap_of(*edge)
+        fam_members[fi].append(edge)
+        edge_capacity[edge] = cval
+        fam_cap[fi] = min(fam_cap[fi], cval)
+
+    # Precompile the capacity-independent CSR half of the incidence:
+    # decode family-major ids ℓ = i·(m−1) + j − [j>i] to dense i·m + j,
+    # then sort by the fused unique (link, family) key — the order the
+    # reference compiler's stable by-link sort produces.
+    all_ids = np.concatenate(fam_ids)
+    li = all_ids // (m - 1)
+    lj = all_ids % (m - 1)
+    lj += lj >= li
+    dense = li * m + lj
+    nf = len(fam_keys)
+    cat = np.repeat(
+        np.arange(nf, dtype=np.int64),
+        np.asarray([a.size for a in fam_ids], dtype=np.int64),
+    )
+    if dense.size and int(dense.max()) <= (2**62) // max(nf, 1):
+        csr = np.argsort(dense * nf + cat)
+    else:
+        csr = np.lexsort((cat, dense))
+    entry_link, entry_cat = dense[csr], cat[csr]
+    flat = _FlatCategories(
+        num_agents=m,
+        num_categories=nf,
+        entry_link=entry_link,
+        entry_cat=entry_cat,
+        link_ptr=np.concatenate(
+            (
+                np.zeros(1, dtype=np.int64),
+                np.cumsum(
+                    np.bincount(entry_link, minlength=m * m),
+                    dtype=np.int64,
+                ),
+            )
+        ),
+    )
+    return Categories(
+        members={
+            F: tuple(v) for F, v in zip(fam_keys, fam_members)
+        },
+        capacity=dict(zip(fam_keys, fam_cap)),
+        edge_capacity=edge_capacity,
+        flat=flat,
+    )
+
+
 def infer_categories(
     overlay: OverlayNetwork,
     capacity_noise: float = 0.0,
@@ -315,7 +531,15 @@ def infer_categories(
     cap = {}
     for F, c in truth.capacity.items():
         noise = 1.0 + capacity_noise * rng.standard_normal()
-        cap[F] = float(max(c * noise, 1e-9))
+        # Clamp to a *relative* floor (1% of the true C_F): an absolute
+        # epsilon floor would let a large negative noise draw shrink a
+        # capacity by ~9 orders of magnitude, silently blowing up every
+        # κ/C_F term and poisoning sweep comparisons. No consistent
+        # tomography estimator is off by 100×; cap the modeled error
+        # there and keep τ finite and sane.
+        cap[F] = float(max(c * noise, 0.01 * c))
     return Categories(
-        members={F: () for F in truth.capacity}, capacity=cap
+        members={F: () for F in truth.capacity},
+        capacity=cap,
+        flat=truth.flat,  # same families: the incidence structure holds
     )

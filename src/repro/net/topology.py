@@ -135,6 +135,87 @@ class OverlayNetwork:
         """Edge networks: negligible propagation delay (paper §III-A2)."""
         return 0.0
 
+    def batched_path_edges(
+        self,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """All (overlay-link, underlay-edge) incidence pairs as flat arrays.
+
+        Returns ``(link, u, v, rank)`` int64 arrays with one row per
+        directed underlay edge ``(u, v)`` traversed by a directed overlay
+        link: ``link`` indexes ``directed_overlay_links`` (i-major order,
+        ``i·(m−1) + j − [j > i]``), and ``rank`` is a strictly increasing
+        key along each link's path and across links in that order —
+        ``argsort(rank)`` recovers the exact per-hop traversal order a
+        ``for (i, j) in directed_overlay_links: for e in path_edges(i, j)``
+        double loop would visit. Rows are *emitted* batched by path
+        length (each bucket is one stacked-matrix slice), not in
+        traversal order; consumers that need order sort by ``rank``.
+
+        This is the array replacement for the per-link ``path_edges``
+        loop: the Python work is O(#pairs) dict lookups plus a few dozen
+        per-length batches, while the per-hop work is numpy.
+        """
+        m = self.num_agents
+        empty = np.empty(0, dtype=np.int64)
+        if m < 2:
+            return empty, empty, empty, empty
+        # Bucket the m(m−1)/2 stored paths by length so each bucket
+        # vectorizes as one [n, k+1] node matrix. When the paths mapping
+        # holds exactly one entry per unordered pair (any key order),
+        # iterate it directly; otherwise walk the pairs through
+        # ``path()`` (which resolves reversed keys).
+        by_len: dict[int, tuple[list, list, list]] = {}
+        if len(self.paths) == m * (m - 1) // 2:
+            for (a, b_), p in self.paths.items():
+                if a > b_:
+                    a, b_, p = b_, a, tuple(reversed(p))
+                b = by_len.get(len(p))
+                if b is None:
+                    b = by_len[len(p)] = ([], [], [])
+                b[0].append(a)
+                b[1].append(b_)
+                b[2].append(p)
+        else:
+            for i in range(m):
+                for j in range(i + 1, m):
+                    p = self.path(i, j)
+                    b = by_len.get(len(p))
+                    if b is None:
+                        b = by_len[len(p)] = ([], [], [])
+                    b[0].append(i)
+                    b[1].append(j)
+                    b[2].append(p)
+        stride = max(by_len) - 1  # ≥ every path's edge count
+        links, us, vs, ranks = [], [], [], []
+        for npath, (ilist, jlist, plist) in sorted(by_len.items()):
+            k = npath - 1
+            if k <= 0:
+                continue  # duplicate placement is rejected by validate()
+            nodes = np.asarray(plist, dtype=np.int64)  # [n, k+1]
+            li = np.asarray(ilist, dtype=np.int64)
+            lj = np.asarray(jlist, dtype=np.int64)
+            t = np.arange(k, dtype=np.int64)
+            # Forward direction i→j: edges (p_t, p_{t+1}) in path order.
+            lf = li * (m - 1) + lj - 1  # j > i
+            links.append(np.repeat(lf, k))
+            us.append(nodes[:, :-1].ravel())
+            vs.append(nodes[:, 1:].ravel())
+            ranks.append((lf[:, None] * stride + t).ravel())
+            # Reverse direction j→i traverses the reversed node path.
+            lr = lj * (m - 1) + li  # i < j
+            links.append(np.repeat(lr, k))
+            us.append(nodes[:, :0:-1].ravel())
+            vs.append(nodes[:, -2::-1].ravel())
+            ranks.append((lr[:, None] * stride + t).ravel())
+        if not links:
+            return empty, empty, empty, empty
+        return (
+            np.concatenate(links),
+            np.concatenate(us),
+            np.concatenate(vs),
+            np.concatenate(ranks),
+        )
+
     def validate(self) -> None:
         self.underlay.validate()
         if len(set(self.agents)) != len(self.agents):

@@ -1,11 +1,17 @@
+import dataclasses
+from typing import Mapping
+
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.net import (
+    Underlay,
     build_overlay,
     compute_categories,
     dumbbell_underlay,
     infer_categories,
+    random_geometric_underlay,
 )
 
 
@@ -53,3 +59,96 @@ def test_inferred_matches_truth(roofnet_overlay):
     assert set(inf.capacity) == set(truth.capacity)
     for F in truth.capacity:
         assert inf.capacity[F] == pytest.approx(truth.capacity[F])
+
+
+def test_capacity_noise_clamps_to_relative_floor(roofnet_overlay):
+    """Large noise draws must not shrink a capacity to the old absolute
+    1e-9 floor (a ~1e9× τ blowup that poisons sweeps): the clamp is 1%
+    of the true C_F, so every noisy κ/C_F term stays within 100× of the
+    truth and completion times stay finite and sane."""
+    truth = compute_categories(roofnet_overlay)
+    # σ = 50: most draws push c·(1 + 50·N(0,1)) far below zero.
+    inf = infer_categories(roofnet_overlay, capacity_noise=50.0, seed=0)
+    assert any(
+        inf.capacity[F] == pytest.approx(0.01 * truth.capacity[F])
+        for F in truth.capacity
+    ), "expected at least one clamped draw at sigma=50"
+    for F, c in truth.capacity.items():
+        assert inf.capacity[F] >= 0.01 * c
+        assert np.isfinite(inf.capacity[F]) and inf.capacity[F] > 0
+    # Ring-load completion time under the noisy estimate is within the
+    # 100× clamp of the truth, not 1e9× off.
+    m = roofnet_overlay.num_agents
+    uses = {}
+    for i in range(m):
+        j = (i + 1) % m
+        uses[(i, j)] = 1
+        uses[(j, i)] = 1
+    tau_true = truth.completion_time(uses, kappa=1e6)
+    tau_noisy = inf.completion_time(uses, kappa=1e6)
+    assert np.isfinite(tau_noisy)
+    assert tau_noisy <= 100.0 * tau_true * (1 + 1e-12)
+
+
+def test_noisy_sweep_stays_finite(roofnet_overlay):
+    from repro.core import ConvergenceConstants, sweep_iterations
+
+    inf = infer_categories(roofnet_overlay, capacity_noise=50.0, seed=0)
+    best = sweep_iterations(
+        inf, 1e6, roofnet_overlay.num_agents, iteration_grid=(12,),
+        constants=ConvergenceConstants(epsilon=0.05),
+        optimize_routing=False,
+    )
+    assert np.isfinite(best.total_time)
+    assert np.isfinite(best.tau_bar) and best.tau_bar > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class _DirectionalUnderlay(Underlay):
+    """Underlay whose capacity is direction-dependent: the base graph
+    capacity times a per-directed-edge factor, with the same
+    direction-first lookup rule ``Categories.scaled`` uses."""
+
+    factors: Mapping = dataclasses.field(default_factory=dict)
+
+    def capacity(self, u: int, v: int) -> float:
+        f = self.factors.get((u, v), self.factors.get((v, u), 1.0))
+        return float(self.graph.edges[u, v]["capacity"]) * float(f)
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=10, deadline=None)
+def test_scaled_directional_asymmetry_matches_mutated_underlay(seed):
+    """Property: ``Categories.scaled`` with a per-edge mapping carrying
+    *different* factors for the two directions of an underlay edge
+    equals ``compute_categories`` on the overlay atop an underlay with
+    the correspondingly direction-scaled capacities — bitwise, including
+    family order."""
+    u = random_geometric_underlay(20, radius=0.4, seed=seed)
+    rng = np.random.default_rng(seed + 77)
+    for _, _, data in u.graph.edges(data=True):
+        data["capacity"] = 125_000.0 * rng.uniform(0.3, 3.0)
+    ov = build_overlay(u, list(u.graph.nodes)[:5])
+    cats = compute_categories(ov)
+    directed_edges = list(cats.edge_capacity)
+    picks = rng.choice(
+        len(directed_edges),
+        size=min(4, len(directed_edges)),
+        replace=False,
+    )
+    scale: dict = {}
+    for p in picks:
+        e = directed_edges[p]
+        # Distinct factors per direction of the same underlay edge.
+        scale[e] = float(rng.uniform(0.2, 2.0))
+        scale[(e[1], e[0])] = float(rng.uniform(0.2, 2.0))
+    scaled = cats.scaled(scale)
+    mutated = dataclasses.replace(
+        ov, underlay=_DirectionalUnderlay(graph=u.graph, factors=scale)
+    )
+    truth = compute_categories(mutated)
+    assert list(scaled.members.items()) == list(truth.members.items())
+    assert list(scaled.capacity.items()) == list(truth.capacity.items())
+    assert list(scaled.edge_capacity.items()) == list(
+        truth.edge_capacity.items()
+    )

@@ -1,0 +1,201 @@
+"""Bitwise parity of the vectorized category pipeline against the
+retained references: ``compute_categories`` vs
+``_compute_categories_reference`` (same family keys in the same order,
+same member-edge order, same capacities) and
+``compile_category_incidence`` vs ``_compile_category_incidence_reference``
+(same CSR entry order and dtypes), plus the batched path-edge extraction
+and the τ̄-via-incidence fast path."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.fmmd import _tau_bar
+from repro.net import (
+    build_overlay,
+    compile_category_incidence,
+    compute_categories,
+    dumbbell_underlay,
+    infer_categories,
+    random_geometric_underlay,
+    roofnet_like,
+)
+from repro.net.categories import (
+    _compile_category_incidence_reference,
+    _compute_categories_reference,
+)
+
+
+def _random_overlay(seed: int, m: int):
+    u = random_geometric_underlay(25, radius=0.35, seed=seed)
+    rng = np.random.default_rng(seed + 1000)
+    for _, _, data in u.graph.edges(data=True):
+        data["capacity"] = 125_000.0 * rng.uniform(0.3, 3.0)
+    return build_overlay(u, list(u.graph.nodes)[:m])
+
+
+def _assert_categories_bitwise(vec, ref):
+    # list() compares keys AND insertion order; values bitwise.
+    assert list(vec.members.items()) == list(ref.members.items())
+    assert list(vec.capacity.items()) == list(ref.capacity.items())
+    assert list(vec.edge_capacity.items()) == list(ref.edge_capacity.items())
+
+
+def _assert_incidence_bitwise(fast, slow):
+    assert fast.num_agents == slow.num_agents
+    assert fast.kappa == slow.kappa
+    for name in ("capacity", "entry_link", "entry_cat", "entry_coef",
+                 "link_ptr"):
+        a, b = getattr(fast, name), getattr(slow, name)
+        assert a.dtype == b.dtype, name
+        assert np.array_equal(a, b), name
+
+
+@given(seed=st.integers(0, 40), m=st.integers(2, 8))
+@settings(max_examples=12, deadline=None)
+def test_compute_categories_bitwise_matches_reference(seed, m):
+    ov = _random_overlay(seed, m)
+    _assert_categories_bitwise(
+        compute_categories(ov), _compute_categories_reference(ov)
+    )
+
+
+def test_compute_categories_bitwise_on_paper_instances(roofnet_overlay):
+    _assert_categories_bitwise(
+        compute_categories(roofnet_overlay),
+        _compute_categories_reference(roofnet_overlay),
+    )
+    ov = build_overlay(dumbbell_underlay(), [0, 1, 2, 3])
+    _assert_categories_bitwise(
+        compute_categories(ov), _compute_categories_reference(ov)
+    )
+
+
+@given(seed=st.integers(0, 40), m=st.integers(2, 8))
+@settings(max_examples=12, deadline=None)
+def test_compile_incidence_bitwise_matches_reference(seed, m):
+    """Both on the flat-payload-carrying Categories and on the
+    payload-free reference output (fallback path)."""
+    ov = _random_overlay(seed, m)
+    kappa = 1e6
+    vec = compute_categories(ov)
+    ref = _compute_categories_reference(ov)
+    assert vec.flat is not None and ref.flat is None
+    fast = compile_category_incidence(vec, m, kappa)
+    slow = _compile_category_incidence_reference(ref, m, kappa)
+    _assert_incidence_bitwise(fast, slow)
+    # Fallback path (no payload) is the reference bitwise as well.
+    _assert_incidence_bitwise(
+        compile_category_incidence(ref, m, kappa), slow
+    )
+
+
+@given(seed=st.integers(0, 30), scale=st.floats(0.1, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_scaled_categories_keep_payload_and_compile_bitwise(seed, scale):
+    """``Categories.scaled`` propagates the CSR payload; compiling the
+    scaled categories stays bitwise vs the reference compiler."""
+    ov = _random_overlay(seed, 6)
+    vec = compute_categories(ov).scaled(scale)
+    assert vec.flat is not None
+    _assert_incidence_bitwise(
+        compile_category_incidence(vec, 6, 2e6),
+        _compile_category_incidence_reference(vec, 6, 2e6),
+    )
+
+
+def test_inferred_categories_carry_payload_and_compile_bitwise(
+    roofnet_overlay,
+):
+    m = roofnet_overlay.num_agents
+    inf = infer_categories(roofnet_overlay, capacity_noise=0.2, seed=3)
+    assert inf.flat is not None
+    _assert_incidence_bitwise(
+        compile_category_incidence(inf, m, 1e6),
+        _compile_category_incidence_reference(inf, m, 1e6),
+    )
+
+
+@given(seed=st.integers(0, 40), m=st.integers(2, 7))
+@settings(max_examples=10, deadline=None)
+def test_batched_path_edges_matches_per_link_loop(seed, m):
+    """argsort(rank) recovers exactly the reference double loop's
+    (link, edge) traversal sequence."""
+    ov = _random_overlay(seed, m)
+    link, eu, ev, rank = ov.batched_path_edges()
+    order = np.argsort(rank)
+    got = list(zip(link[order], eu[order], ev[order]))
+    expected = []
+    for li, (i, j) in enumerate(ov.directed_overlay_links):
+        for (u, v) in ov.path_edges(i, j):
+            expected.append((li, u, v))
+    assert got == expected
+
+
+def test_batched_path_edges_empty_overlay():
+    u = dumbbell_underlay()
+    ov = build_overlay(u, [0])
+    link, eu, ev, rank = ov.batched_path_edges()
+    assert link.size == ev.size == eu.size == rank.size == 0
+    cats = compute_categories(ov)
+    assert cats.members == {} and cats.capacity == {}
+
+
+@given(seed=st.integers(0, 30), nlinks=st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_tau_bar_incidence_path_bitwise(seed, nlinks):
+    ov = _random_overlay(seed, 7)
+    cats = compute_categories(ov)
+    kappa = 1e6
+    inc = compile_category_incidence(cats, 7, kappa)
+    rng = np.random.default_rng(seed)
+    links = frozenset(
+        tuple(sorted(rng.choice(7, 2, replace=False).tolist()))
+        for _ in range(nlinks)
+    )
+    assert _tau_bar(links, cats, kappa, incidence=inc) == _tau_bar(
+        links, cats, kappa
+    )
+
+
+def test_nonconsecutive_node_ids_still_bitwise():
+    """Node ids need not be 0..N-1; the edge-code encoding only assumes
+    nonnegative ints."""
+    import networkx as nx
+
+    from repro.net import Underlay
+
+    g = nx.Graph()
+    for a, b in [(5, 17), (17, 40), (40, 5), (17, 99), (99, 40)]:
+        g.add_edge(a, b, capacity=1000.0 + a + b)
+    u = Underlay(graph=g)
+    ov = build_overlay(u, [5, 99, 40])
+    _assert_categories_bitwise(
+        compute_categories(ov), _compute_categories_reference(ov)
+    )
+
+
+@pytest.mark.parametrize(
+    "nodes",
+    [
+        (0.5, 1.5, 2.5),  # float ids: int64 cast would truncate silently
+        (4_000_000_000, 4_000_000_001, 4_000_000_002),  # id² overflows
+    ],
+)
+def test_unencodable_node_ids_fall_back_to_reference(nodes):
+    """Node ids the int64 edge-code encoding cannot represent take the
+    reference path instead of crashing on a bogus decoded edge (or
+    silently mis-grouping on a truncation collision)."""
+    import networkx as nx
+
+    from repro.net import Underlay
+
+    g = nx.Graph()
+    a, b, c = nodes
+    g.add_edge(a, b, capacity=1000.0)
+    g.add_edge(b, c, capacity=2000.0)
+    u = Underlay(graph=g)
+    ov = build_overlay(u, [a, c])
+    _assert_categories_bitwise(
+        compute_categories(ov), _compute_categories_reference(ov)
+    )

@@ -96,3 +96,49 @@ def test_sweep_method_parameter(roofnet_overlay, roofnet_categories):
     )
     assert out.design.variant == "FMMD-P"
     assert np.isfinite(out.total_time)
+
+
+def test_per_edge_phases_with_inferred_categories_fail_fast(
+    roofnet_overlay,
+):
+    """Regression: ``evaluate_design(scenario=...)`` with per-edge
+    ``CapacityPhase`` scales and *inferred* categories used to crash
+    with a deep ``ValueError`` from ``Categories.scaled`` inside the
+    routing stack; the designer now raises an actionable error naming
+    the fix before any routing work."""
+    from repro.core.designer import evaluate_design
+    from repro.core.fmmd import fmmd
+    from repro.net import (
+        CapacityPhase,
+        Scenario,
+        compute_categories,
+        infer_categories,
+    )
+
+    inferred = infer_categories(roofnet_overlay)
+    d = fmmd(10, 6)
+    edge = next(iter(compute_categories(roofnet_overlay).edge_capacity))
+    scen = Scenario(
+        capacity_phases=(CapacityPhase(start=10.0, scale={edge: 0.5}),)
+    )
+    with pytest.raises(ValueError, match="compute_categories"):
+        evaluate_design(
+            d, inferred, PAPER_MODEL_BYTES, 10, overlay=roofnet_overlay,
+            scenario=scen, reroute_per_phase=True, milp_time_limit=1.0,
+        )
+    # Scalar phases on inferred categories keep working.
+    out = evaluate_design(
+        d, inferred, PAPER_MODEL_BYTES, 10, overlay=roofnet_overlay,
+        scenario=Scenario(
+            capacity_phases=(CapacityPhase(start=10.0, scale=0.5),)
+        ),
+        reroute_per_phase=True, milp_time_limit=1.0,
+    )
+    assert np.isfinite(out.tau)
+    # Ground-truth categories accept per-edge phases.
+    truth = compute_categories(roofnet_overlay)
+    out = evaluate_design(
+        d, truth, PAPER_MODEL_BYTES, 10, overlay=roofnet_overlay,
+        scenario=scen, reroute_per_phase=True, milp_time_limit=1.0,
+    )
+    assert np.isfinite(out.tau)

@@ -60,3 +60,24 @@ def test_iterations_to_converge_monotone_in_rho():
     ks = [mixing.iterations_to_converge(r, 10) for r in (0.1, 0.5, 0.9, 0.99)]
     assert all(a < b for a, b in zip(ks, ks[1:]))
     assert mixing.iterations_to_converge(1.0, 10) == np.inf
+
+
+@given(m=st.integers(2, 12), seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_fw_step_bitwise_matches_dense_formula(m, seed):
+    """Property: the in-place Frank-Wolfe step equals forming the atom
+    densely and evaluating (1−γ)·W + γ·S — bitwise, at every point of a
+    random FW trajectory (identity and swapping atoms interleaved)."""
+    rng = np.random.default_rng(seed)
+    w = np.eye(m)
+    for k in range(int(rng.integers(1, 25))):
+        gamma = 2.0 / (k + 2.0)
+        if rng.random() < 0.2:
+            atom, s = None, np.eye(m)
+        else:
+            i, j = sorted(int(x) for x in rng.choice(m, 2, replace=False))
+            atom, s = (i, j), mixing.swapping_matrix(m, i, j)
+        dense = (1.0 - gamma) * w + gamma * s
+        mixing.fw_step(w, gamma, atom)
+        assert np.array_equal(w, dense)
+    mixing.validate_mixing(w)

@@ -140,6 +140,61 @@ def test_wallclock_derived_metric_tolerates_jitter(tmp_path):
     assert trend.main([base, collapse]) == 1
 
 
+def test_vanished_metric_prints_notice(tmp_path, capsys):
+    """Regression: a benchmark that stops emitting its gate metric must
+    not pass *silently* — the vanished metric is listed (notice only,
+    never a failure: removal is a code change, not a regression)."""
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("phase_routing", derived="makespan_phased_s=3136.0;win=4.20x"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [
+        _rec("phase_routing", derived="win=4.20x"),  # makespan gone
+    ])
+    assert trend.main([base, cur]) == 0
+    out = capsys.readouterr().out
+    assert "missing from this run" in out
+    assert "phase_routing.makespan_phased_s" in out
+    assert "phase_routing.win" not in out
+
+
+def test_vanished_benchmark_notice_mentions_lost_gating(tmp_path, capsys):
+    base = _write(tmp_path / "base.jsonl", [
+        _rec("old_bench", derived="tau_s=5.0"), _rec("kept"),
+    ])
+    cur = _write(tmp_path / "cur.jsonl", [_rec("kept")])
+    assert trend.main([base, cur]) == 0
+    out = capsys.readouterr().out
+    assert "old_bench" in out
+    assert "no longer gated" in out
+
+
+def test_vanished_metrics_helper():
+    base = {
+        "a": _rec("a", derived="x=1;y=2"),
+        "b": _rec("b", derived="z=3"),
+    }
+    cur = {
+        "a": _rec("a", derived="y=2"),  # lost a.x
+        "c": _rec("c", derived="w=4"),  # new bench: not "vanished"
+    }
+    # b is absent entirely — reported by the benchmark-level notice,
+    # not duplicated per metric here.
+    assert trend.vanished_metrics(base, cur) == ["a.x"]
+
+
+def test_unparseable_us_per_call_counts_as_vanished(tmp_path, capsys):
+    """A record whose us_per_call stops being numeric loses that metric
+    from the gate — it must show in the vanished notice."""
+    base = _write(tmp_path / "base.jsonl", [_rec("g", us=1000.0)])
+    cur = _write(
+        tmp_path / "cur.jsonl",
+        [{"name": "g", "us_per_call": None, "derived": "",
+          "timestamp": "2026-07-29T00:00:00+00:00"}],
+    )
+    assert trend.main([base, cur]) == 0
+    assert "g.us_per_call" in capsys.readouterr().out
+
+
 def test_parse_derived_tolerates_junk():
     got = trend.parse_derived(
         "win=4.20x;label=heuristic;count=17;empty;=;x=1e-3"

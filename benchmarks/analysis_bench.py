@@ -1,0 +1,115 @@
+"""Invariant lint + contract suite runtime, as a tracked metric.
+
+The static checkers run on every push and the runtime contracts run
+under the nightly tier-1 suite, so their cost is part of the CI
+budget: this benchmark times both and emits them through
+``common.emit`` so ``benchmarks/trend.py`` flags contract-overhead
+regressions like any other tracked metric.
+
+* ``lint_seconds``     — one full ``repro.analysis`` run (all four
+                         checkers + waiver resolution) on this repo;
+* ``validate_seconds`` — REPRO_VALIDATE=1 construction of the three
+                         CSR structures on a 60-agent instance.
+
+The validated/plain overhead ratio is printed for humans but not
+emitted: trend's naming convention reads ``ratio``/``x`` as
+higher-is-better, which is backwards for an overhead — regressions
+surface through the two ``*seconds*`` wall-clock metrics instead.
+
+The run also asserts the suite is green on the repo (exit 0) — a red
+lint should fail the nightly loudly, not just the push gate.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.analysis.__main__ import CHECKERS, run as run_checkers
+from repro.net import (
+    build_overlay,
+    compute_categories,
+    lowest_degree_nodes,
+    random_geometric_underlay,
+)
+from repro.net.categories import compile_category_incidence
+from repro.net.demands import demands_from_links
+from repro.net.routing import route_congestion_aware
+from repro.net.simulator import compile_incidence
+
+REPO = Path(__file__).resolve().parents[1]
+NUM_AGENTS = 60
+KAPPA = 94.47e6
+
+
+def _time_lint() -> float:
+    t0 = time.perf_counter()
+    unwaived, waived = run_checkers(REPO, list(CHECKERS))
+    elapsed = time.perf_counter() - t0
+    assert not unwaived, (
+        "repo lint is red:\n" + "\n".join(f.render() for f in unwaived)
+    )
+    assert waived, "waiver file should hold live exemptions"
+    return elapsed
+
+
+def _build_structures(overlay, cats, sol):
+    """The constructions the contracts guard: category incidence,
+    branch incidence, and the _FlatCategories payload (rebuilt via
+    compute_categories)."""
+    compute_categories(overlay)
+    inc = compile_category_incidence(cats, NUM_AGENTS, KAPPA)
+    binc = compile_incidence(sol, overlay)
+    return inc, binc
+
+
+def _time_construction(overlay, cats, sol, validate: bool,
+                       reps: int = 3) -> float:
+    prev = os.environ.get("REPRO_VALIDATE")
+    os.environ["REPRO_VALIDATE"] = "1" if validate else "0"
+    try:
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _build_structures(overlay, cats, sol)
+            best = min(best, time.perf_counter() - t0)
+        return best
+    finally:
+        if prev is None:
+            del os.environ["REPRO_VALIDATE"]
+        else:
+            os.environ["REPRO_VALIDATE"] = prev
+
+
+def main() -> None:
+    lint_seconds = _time_lint()
+
+    u = random_geometric_underlay(300, seed=0)
+    ov = build_overlay(u, lowest_degree_nodes(u, NUM_AGENTS))
+    cats = compute_categories(ov)
+    ring = [(i, (i + 1) % NUM_AGENTS) for i in range(NUM_AGENTS)]
+    demands = demands_from_links(ring, KAPPA, NUM_AGENTS)
+    sol = route_congestion_aware(demands, cats, KAPPA, NUM_AGENTS)
+
+    plain = _time_construction(ov, cats, sol, validate=False)
+    validated = _time_construction(ov, cats, sol, validate=True)
+    overhead = validated / plain if plain > 0 else float("inf")
+
+    emit(
+        "analysis_suite",
+        lint_seconds * 1e6,
+        f"lint_seconds={lint_seconds:.3f};"
+        f"validate_seconds={validated:.3f}",
+    )
+    print(f"  lint suite ({', '.join(CHECKERS)}): {lint_seconds:.2f}s")
+    print(
+        f"  {NUM_AGENTS}-agent CSR construction: {plain * 1e3:.1f}ms "
+        f"plain vs {validated * 1e3:.1f}ms validated "
+        f"({overhead:.2f}x)"
+    )
+
+
+if __name__ == "__main__":
+    main()

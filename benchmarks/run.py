@@ -9,6 +9,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        analysis_bench,
         design_scale,
         engine_parity,
         fig4_fmmd_variants,
@@ -36,6 +37,7 @@ def main() -> None:
         "stochastic_routing": stochastic_routing.main,
         "engine_parity": engine_parity.main,
         "design_scale": design_scale.main,
+        "analysis_bench": analysis_bench.main,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

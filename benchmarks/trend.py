@@ -229,8 +229,19 @@ def main(argv: list[str] | None = None) -> int:
         )
         return 0
     baseline = load_records(args.baseline)
-    current = load_records(args.current)
+    current = (
+        load_records(args.current) if os.path.exists(args.current) else {}
+    )
     if not current:
+        if os.environ.get("BENCH_JSON"):
+            print(
+                f"trend: $BENCH_JSON is set but {args.current!r} holds "
+                "no benchmark records — the benchmark job emitted "
+                "nothing (every benchmark died before common.emit, or "
+                "emission broke). Failing so the empty run is visible "
+                "instead of silently passing the gate."
+            )
+            return 1
         print(f"trend: no records in {args.current!r} — nothing to gate.")
         return 0
 

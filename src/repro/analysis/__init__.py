@@ -1,0 +1,47 @@
+"""Invariant lint + contract layer.
+
+The repo's headline results rest on invariants that used to hold only
+by convention: bitwise reference/fast-path parity, seeded-only
+randomness, float64 on every pricing path, and well-formed CSR
+incidence payloads. This package makes them machine-checked:
+
+* **Static analysis** (``python -m repro.analysis --all``) — four
+  AST-based checkers run as a CI gate on every push:
+
+  - ``determinism``  — unseeded RNG, time/environment reads, and
+    set-iteration-order hazards in ``net/``, ``core/``, ``runtime/``;
+  - ``dtypes``       — narrow float/int dtypes on pricing paths
+    (everything priced must be float64, every index array int64);
+  - ``parity``       — every ``*_reference`` implementation must be
+    registered in ``parity_manifest.txt`` with a fast path and a test
+    that exercises both, so optimization PRs cannot silently drop
+    reference-parity coverage;
+  - ``contracts``    — the CSR structures (``BranchIncidence``,
+    ``CategoryIncidence``, ``_FlatCategories``) must keep their
+    runtime-validation hook wired in ``__post_init__``.
+
+  Exemptions live in ``waivers.txt``, one reviewed reason per site
+  (see CONTRIBUTING.md); unused or malformed waivers fail the run.
+
+* **Runtime contracts** (``repro.analysis.contracts``) — declarative
+  invariants (ptr monotone, indices in-bounds, exact dtypes, array
+  lengths consistent) validated at construction of the three CSR
+  structures when ``REPRO_VALIDATE=1``. Off by default (zero overhead
+  beyond one env lookup); the nightly tier-1 run enables it.
+
+This ``__init__`` stays light on purpose: ``net``/``core`` import
+``repro.analysis.contracts`` at module load, so nothing here may pull
+in the AST machinery or (worse) anything from ``repro.net``.
+"""
+
+from repro.analysis.contracts import (
+    ContractViolation,
+    maybe_validate,
+    validation_enabled,
+)
+
+__all__ = [
+    "ContractViolation",
+    "maybe_validate",
+    "validation_enabled",
+]

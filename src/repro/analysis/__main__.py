@@ -1,0 +1,80 @@
+"""CLI: ``python -m repro.analysis [--all | --<checker>...]``.
+
+Runs the static invariant checkers and exits non-zero when any
+unwaived finding remains. ``--root`` points the suite at another tree
+(the negative fixtures under ``tests/fixtures/lint_negative`` are the
+self-test: one planted violation per checker).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.analysis import common, contracts_static, determinism, dtypes, parity
+
+CHECKERS = {
+    "determinism": determinism.check,
+    "dtypes": dtypes.check,
+    "parity": parity.check,
+    "contracts": contracts_static.check,
+}
+
+
+def run(
+    root: Path, names: list[str], waiver_path: Path | None = None
+) -> tuple[list[common.Finding], list[common.Finding]]:
+    """(unwaived, waived) findings of the selected checkers on
+    ``root``. The waiver file defaults to the tree's own
+    ``src/repro/analysis/waivers.txt`` (fixture trees ship their own
+    or none)."""
+    findings: list[common.Finding] = []
+    for name in names:
+        findings.extend(CHECKERS[name](root))
+    if waiver_path is None:
+        waiver_path = root / "src/repro/analysis" / common.WAIVERS_FILENAME
+    waivers, waiver_findings = common.load_waivers(waiver_path)
+    findings.extend(waiver_findings)
+    return common.apply_waivers(findings, waivers, waiver_path)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__.splitlines()[0],
+    )
+    ap.add_argument("--all", action="store_true",
+                    help="run every checker (default when none selected)")
+    for name in CHECKERS:
+        ap.add_argument(f"--{name}", action="store_true",
+                        help=f"run the {name} checker")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="tree to analyze (default: this repo)")
+    ap.add_argument("--waivers", type=Path, default=None,
+                    help="waiver file (default: <root>/src/repro/"
+                         "analysis/waivers.txt)")
+    args = ap.parse_args(argv)
+
+    selected = [n for n in CHECKERS if getattr(args, n)]
+    if args.all or not selected:
+        selected = list(CHECKERS)
+    root = (args.root or common.repo_root()).resolve()
+
+    t0 = time.perf_counter()
+    unwaived, waived = run(root, selected, args.waivers)
+    elapsed = time.perf_counter() - t0
+
+    for f in sorted(unwaived, key=lambda f: (f.path, f.line)):
+        print(f.render())
+    print(
+        f"repro.analysis: {', '.join(selected)} on {root} — "
+        f"{len(unwaived)} finding(s), {len(waived)} waived, "
+        f"{elapsed:.2f}s"
+    )
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

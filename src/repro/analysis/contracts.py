@@ -1,0 +1,270 @@
+"""Runtime CSR contracts for the incidence structures.
+
+The vectorized engines trust their precompiled CSR payloads blindly:
+a non-monotone ``link_ptr`` silently mis-slices, an out-of-bounds
+entry index reads another link's categories, a float32 capacity array
+perturbs every priced makespan. These invariants are declared here
+once and validated at construction of ``BranchIncidence``
+(``net/simulator.py``), ``CategoryIncidence`` and ``_FlatCategories``
+(``net/categories.py``) whenever ``REPRO_VALIDATE=1`` — the safety net
+incremental incidence patching (ROADMAP item 3) will run behind.
+
+Validation is opt-in because construction sits on hot paths (one
+incidence per routing solution, one rescale per capacity phase): with
+the flag unset the cost is one environment lookup and a dict probe.
+The nightly tier-1 suite runs with it enabled; tests can monkeypatch
+``REPRO_VALIDATE``.
+
+This module is imported by ``repro.net`` at module load, so it must
+not import anything from ``repro`` outside this package. Dispatch is
+by class *name* (``maybe_validate``) for the same reason: the
+dataclasses call in, never the other way around.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+_ENV_FLAG = "REPRO_VALIDATE"
+
+
+class ContractViolation(ValueError):
+    """A CSR incidence structure failed a declared invariant.
+
+    ``structure``/``field``/``invariant`` name the violation precisely;
+    the message says what was found and what well-formed looks like, so
+    the error is actionable at the (possibly distant) construction site
+    that produced the corrupt payload.
+    """
+
+    def __init__(self, structure: str, field: str, invariant: str,
+                 detail: str):
+        self.structure = structure
+        self.field = field
+        self.invariant = invariant
+        super().__init__(
+            f"{structure}.{field} violates '{invariant}': {detail}"
+        )
+
+
+def validation_enabled() -> bool:
+    """True when ``REPRO_VALIDATE`` is set to anything but ''/'0'."""
+    return os.environ.get(_ENV_FLAG, "") not in ("", "0")
+
+
+# ---------------------------------------------------------------------------
+# Invariant primitives — each raises ContractViolation with a named
+# invariant and an actionable message.
+# ---------------------------------------------------------------------------
+
+
+def _check_dtype(structure: str, field: str, arr: np.ndarray,
+                 expected: type) -> None:
+    if not isinstance(arr, np.ndarray):
+        raise ContractViolation(
+            structure, field, "is-ndarray",
+            f"got {type(arr).__name__}; build it with np.asarray(..., "
+            f"dtype=np.{np.dtype(expected).name})",
+        )
+    if arr.dtype != np.dtype(expected):
+        raise ContractViolation(
+            structure, field, "dtype",
+            f"got {arr.dtype}, expected {np.dtype(expected).name} — "
+            "pricing arrays are float64 and index arrays int64 "
+            "everywhere (PR 1-5 discipline); cast at the producer, "
+            "not the consumer",
+        )
+
+
+def _check_length(structure: str, field: str, arr: np.ndarray,
+                  expected: int, what: str) -> None:
+    if arr.ndim != 1 or arr.shape[0] != expected:
+        raise ContractViolation(
+            structure, field, "length",
+            f"shape {arr.shape}, expected ({expected},) — must have one "
+            f"entry per {what}",
+        )
+
+
+def _check_ptr(structure: str, field: str, ptr: np.ndarray,
+               num_rows: int, nnz: int) -> None:
+    """CSR pointer: int64, [num_rows+1], starts 0, ends nnz, monotone."""
+    _check_dtype(structure, field, ptr, np.int64)
+    _check_length(structure, field, ptr, num_rows + 1, "row plus sentinel")
+    if ptr.size and (ptr[0] != 0 or ptr[-1] != nnz):
+        raise ContractViolation(
+            structure, field, "ptr-bounds",
+            f"ptr[0]={ptr[0]}, ptr[-1]={ptr[-1]}, expected 0 and nnz="
+            f"{nnz} — the pointer must span exactly the entry arrays",
+        )
+    if ptr.size and np.any(np.diff(ptr) < 0):
+        bad = int(np.argmax(np.diff(ptr) < 0))
+        raise ContractViolation(
+            structure, field, "ptr-monotone",
+            f"decreases at row {bad} ({ptr[bad]} -> {ptr[bad + 1]}) — "
+            "CSR pointers are cumulative counts and must be "
+            "non-decreasing; rebuild via bincount+cumsum",
+        )
+
+
+def _check_index(structure: str, field: str, idx: np.ndarray,
+                 upper: int, what: str) -> None:
+    """Index array: int64 and within [0, upper)."""
+    _check_dtype(structure, field, idx, np.int64)
+    if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= upper):
+        raise ContractViolation(
+            structure, field, "index-bounds",
+            f"values span [{idx.min()}, {idx.max()}], must lie in "
+            f"[0, {upper}) — every entry must name a real {what}",
+        )
+
+
+def _check_finite_positive(structure: str, field: str,
+                           arr: np.ndarray) -> None:
+    if arr.size and not np.all(np.isfinite(arr) & (arr > 0)):
+        raise ContractViolation(
+            structure, field, "finite-positive",
+            "contains non-finite or non-positive values — capacities "
+            "and coefficients are strictly positive bytes/s quantities",
+        )
+
+
+def _check_ptr_matches_entries(structure: str, ptr_field: str,
+                               ptr: np.ndarray, entry_field: str,
+                               entries: np.ndarray) -> None:
+    """Each CSR slice [ptr[r], ptr[r+1]) must hold entries with row id
+    r — i.e. ptr is exactly the bincount+cumsum of the (sorted) row
+    array. Catches ptr/entry mismatches that in-bounds checks miss."""
+    expect = np.repeat(
+        np.arange(ptr.size - 1, dtype=np.int64), np.diff(ptr)
+    )
+    if not np.array_equal(expect, entries):
+        bad = int(np.argmax(expect != entries))
+        raise ContractViolation(
+            structure, ptr_field, "ptr-entry-consistency",
+            f"slice arithmetic puts entry {bad} in row {expect[bad]} "
+            f"but {entry_field}[{bad}]={entries[bad]} — the entry array "
+            "must be row-major-sorted with ptr its cumulative histogram",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-structure validators (duck-typed: attribute access only, so this
+# module never imports repro.net).
+# ---------------------------------------------------------------------------
+
+
+def validate_branch_incidence(inc) -> None:
+    """All declared invariants of ``net.simulator.BranchIncidence``."""
+    s = "BranchIncidence"
+    nb = inc.flows.shape[0] if hasattr(inc.flows, "shape") else 0
+    _check_dtype(s, "base_capacity", inc.base_capacity, np.float64)
+    _check_finite_positive(s, "base_capacity", inc.base_capacity)
+    ne = inc.base_capacity.shape[0]
+    _check_dtype(s, "flows", inc.flows, np.int64)
+    _check_dtype(s, "links", inc.links, np.int64)
+    if inc.links.shape != (nb, 2):
+        raise ContractViolation(
+            s, "links", "length",
+            f"shape {inc.links.shape}, expected ({nb}, 2) — one (i, j) "
+            "overlay endpoint pair per branch",
+        )
+    nnz = inc.flat_branch.shape[0]
+    _check_index(s, "flat_branch", inc.flat_branch, nb, "branch")
+    _check_length(s, "flat_edge", inc.flat_edge, nnz, "traversal entry")
+    _check_index(s, "flat_edge", inc.flat_edge, ne, "indexed edge")
+    _check_ptr(s, "branch_ptr", inc.branch_ptr, nb, nnz)
+    _check_ptr_matches_entries(
+        s, "branch_ptr", inc.branch_ptr, "flat_branch", inc.flat_branch
+    )
+    _check_length(s, "edge_branch", inc.edge_branch, nnz, "traversal entry")
+    _check_index(s, "edge_branch", inc.edge_branch, nb, "branch")
+    _check_ptr(s, "edge_ptr", inc.edge_ptr, ne, nnz)
+    if len(inc.edges) != ne or len(inc.edge_index) != ne:
+        raise ContractViolation(
+            s, "edges", "length",
+            f"{len(inc.edges)} edges / {len(inc.edge_index)} index "
+            f"entries for {ne} capacities — the three must agree",
+        )
+
+
+def validate_category_incidence(inc) -> None:
+    """All declared invariants of ``net.categories.CategoryIncidence``."""
+    s = "CategoryIncidence"
+    m, nf = inc.num_agents, inc.capacity.shape[0]
+    if not (np.isfinite(inc.kappa) and inc.kappa > 0):
+        raise ContractViolation(
+            s, "kappa", "finite-positive",
+            f"kappa={inc.kappa!r} — per-link traffic must be a positive "
+            "byte count",
+        )
+    _check_dtype(s, "capacity", inc.capacity, np.float64)
+    _check_finite_positive(s, "capacity", inc.capacity)
+    nnz = inc.entry_link.shape[0]
+    _check_index(s, "entry_link", inc.entry_link, m * m, "dense link id")
+    _check_length(s, "entry_cat", inc.entry_cat, nnz, "entry")
+    _check_index(s, "entry_cat", inc.entry_cat, nf, "category")
+    _check_dtype(s, "entry_coef", inc.entry_coef, np.float64)
+    _check_length(s, "entry_coef", inc.entry_coef, nnz, "entry")
+    _check_finite_positive(s, "entry_coef", inc.entry_coef)
+    _check_ptr(s, "link_ptr", inc.link_ptr, m * m, nnz)
+    _check_ptr_matches_entries(
+        s, "link_ptr", inc.link_ptr, "entry_link", inc.entry_link
+    )
+    if nnz and not np.array_equal(
+        inc.entry_coef, (inc.kappa / inc.capacity)[inc.entry_cat]
+    ):
+        raise ContractViolation(
+            s, "entry_coef", "coef-consistency",
+            "entry_coef != (kappa / capacity)[entry_cat] bitwise — "
+            "coefficients must be rebuilt (never patched in place) "
+            "whenever capacity changes; see CategoryIncidence.rescaled",
+        )
+
+
+def validate_flat_categories(flat) -> None:
+    """All declared invariants of ``net.categories._FlatCategories``."""
+    s = "_FlatCategories"
+    m, nf = flat.num_agents, flat.num_categories
+    nnz = flat.entry_link.shape[0]
+    _check_index(s, "entry_link", flat.entry_link, m * m, "dense link id")
+    _check_length(s, "entry_cat", flat.entry_cat, nnz, "entry")
+    _check_index(s, "entry_cat", flat.entry_cat, nf, "category")
+    _check_ptr(s, "link_ptr", flat.link_ptr, m * m, nnz)
+    _check_ptr_matches_entries(
+        s, "link_ptr", flat.link_ptr, "entry_link", flat.entry_link
+    )
+    if nnz > 1:
+        dl = np.diff(flat.entry_link)
+        dc = np.diff(flat.entry_cat)
+        if not np.all((dl > 0) | ((dl == 0) & (dc > 0))):
+            bad = int(np.argmax(~((dl > 0) | ((dl == 0) & (dc > 0)))))
+            raise ContractViolation(
+                s, "entry_link", "entries-sorted",
+                f"entries {bad} and {bad + 1} are not strictly "
+                "(link, category)-ascending — the payload must be the "
+                "fused-key sort compute_categories produces (each "
+                "(link, family) pair at most once)",
+            )
+
+
+# Dispatch by class name: the dataclasses call ``maybe_validate(self)``
+# from ``__post_init__``; this module never imports their definitions.
+# The contracts static checker (contracts_static.py) keys off this
+# registry too — adding a structure here obligates wiring its hook.
+VALIDATORS = {
+    "BranchIncidence": validate_branch_incidence,
+    "CategoryIncidence": validate_category_incidence,
+    "_FlatCategories": validate_flat_categories,
+}
+
+
+def maybe_validate(obj) -> None:
+    """Validate ``obj`` against its registered contract when
+    ``REPRO_VALIDATE`` is on; free (one env read) otherwise."""
+    if validation_enabled():
+        validator = VALIDATORS.get(type(obj).__name__)
+        if validator is not None:
+            validator(obj)

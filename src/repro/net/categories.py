@@ -28,6 +28,7 @@ from typing import Mapping
 
 import numpy as np
 
+from repro.analysis.contracts import maybe_validate
 from repro.net.topology import OverlayNetwork
 
 
@@ -50,6 +51,11 @@ class _FlatCategories:
     entry_link: np.ndarray  # [nnz] dense link id i·m + j, link-major
     entry_cat: np.ndarray  # [nnz] family index per entry
     link_ptr: np.ndarray  # [m²+1] CSR slices per link id
+
+    def __post_init__(self):
+        # CSR well-formedness contract; no-op unless REPRO_VALIDATE=1
+        # (repro.analysis.contracts.validate_flat_categories).
+        maybe_validate(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +184,13 @@ class CategoryIncidence:
     entry_coef: np.ndarray  # [nnz] κ / C_F per entry
     link_ptr: np.ndarray  # [m²+1] CSR slices into entry_* per link id
     source: "Categories | None" = None  # what this was compiled from
+
+    def __post_init__(self):
+        # CSR well-formedness contract; no-op unless REPRO_VALIDATE=1
+        # (repro.analysis.contracts.validate_category_incidence).
+        # ``rescaled``/``dataclasses.replace`` re-run it, so per-phase
+        # recompiles are covered too.
+        maybe_validate(self)
 
     def matches(self, categories: "Categories") -> bool:
         """Cheap fingerprint check that this incidence was compiled from

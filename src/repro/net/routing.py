@@ -361,7 +361,9 @@ def _route_congestion_aware_reference(
     fams = categories.families
     nF = len(fams)
     cat_cost = _link_category_costs(categories, m, kappa)
-    cap = np.array([categories.capacity[F] for F in fams])
+    cap = np.array(
+        [categories.capacity[F] for F in fams], dtype=np.float64
+    )
 
     # t_F loads, maintained incrementally.
     loads = np.zeros(nF)

@@ -45,6 +45,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.analysis.contracts import maybe_validate
 from repro.net.routing import RoutingSolution
 from repro.net.topology import OverlayNetwork
 
@@ -213,6 +214,11 @@ class BranchIncidence:
     branch_ptr: np.ndarray  # [B+1] CSR slices into flat_edge per branch
     edge_branch: np.ndarray  # [entries] branches sorted by (edge, branch)
     edge_ptr: np.ndarray  # [E+1] CSC slices into edge_branch per edge
+
+    def __post_init__(self):
+        # CSR well-formedness contract; no-op unless REPRO_VALIDATE=1
+        # (repro.analysis.contracts.validate_branch_incidence).
+        maybe_validate(self)
 
     @property
     def num_branches(self) -> int:

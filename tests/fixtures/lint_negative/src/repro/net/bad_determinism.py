@@ -1,0 +1,8 @@
+"""Planted determinism violation: OS-entropy-seeded generator."""
+
+import numpy as np
+
+
+def sample_capacities(n):
+    rng = np.random.default_rng()  # planted: unseeded-default-rng
+    return rng.random(n)

@@ -1,0 +1,7 @@
+"""Planted dtype violation: float32 on a pricing path."""
+
+import numpy as np
+
+
+def price(loads, capacity):
+    return (loads / capacity).astype(np.float32)  # planted: narrow-float

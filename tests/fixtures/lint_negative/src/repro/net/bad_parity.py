@@ -1,0 +1,9 @@
+"""Planted parity violation: a reference with no manifest entry."""
+
+
+def _planted_reference(x):  # planted: unregistered-reference
+    return sorted(x)
+
+
+def planted_fast(x):
+    return sorted(x)

@@ -1,0 +1,31 @@
+"""Planted contracts violation: one CSR structure lost its hook.
+
+All three registered contract classes are defined so the only
+contracts finding is the planted one: ``CategoryIncidence`` has no
+``__post_init__`` -> ``maybe_validate`` wiring.
+"""
+
+import dataclasses
+
+from repro.analysis.contracts import maybe_validate
+
+
+@dataclasses.dataclass(frozen=True)
+class BranchIncidence:
+    flows: object
+
+    def __post_init__(self):
+        maybe_validate(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CategoryIncidence:  # planted: missing-contract-hook
+    capacity: object
+
+
+@dataclasses.dataclass(frozen=True)
+class _FlatCategories:
+    entry_link: object
+
+    def __post_init__(self):
+        maybe_validate(self)

@@ -1,0 +1,378 @@
+"""Static invariant lint suite (`repro.analysis`).
+
+Three layers of coverage:
+
+* the **negative fixture tree** (`tests/fixtures/lint_negative`) —
+  one planted violation per checker; the CLI must exit non-zero on
+  it and name each violation;
+* the **self-gate** — the suite must be clean on this repo (no
+  unwaived findings, no unused waivers, manifest in sync). This is
+  the same check CI runs, asserted here so a red lint fails the
+  tier-1 suite too;
+* **unit cases** on synthesized mini-trees for individual rules
+  (waiver mechanics, manifest staleness, determinism/dtype rules).
+"""
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import common, contracts_static, determinism, dtypes, parity
+from repro.analysis.__main__ import CHECKERS, main, run
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURE = REPO / "tests" / "fixtures" / "lint_negative"
+
+
+def codes(findings):
+    return {f.code for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Negative fixture tree: one planted violation per checker
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_tree_trips_every_checker():
+    expected = {
+        "determinism": "unseeded-default-rng",
+        "dtypes": "narrow-float-dtype",
+        "parity": "unregistered-reference",
+        "contracts": "missing-contract-hook",
+    }
+    for name, code in expected.items():
+        findings = CHECKERS[name](FIXTURE)
+        assert [f.code for f in findings] == [code], name
+
+
+def test_cli_exits_nonzero_on_fixture_tree(capsys):
+    assert main(["--all", "--root", str(FIXTURE)]) == 1
+    out = capsys.readouterr().out
+    assert "4 finding(s)" in out
+
+
+def test_cli_checker_selection(capsys):
+    assert main(["--dtypes", "--root", str(FIXTURE)]) == 1
+    out = capsys.readouterr().out
+    assert "narrow-float-dtype" in out
+    assert "unseeded-default-rng" not in out
+
+
+# ---------------------------------------------------------------------------
+# Self-gate: this repo must be clean (and the waiver file live)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean_under_all_checkers():
+    unwaived, waived = run(REPO, list(CHECKERS))
+    assert unwaived == [], "\n".join(f.render() for f in unwaived)
+    # The shipped waiver file is exercised (telemetry timers), and
+    # every waived finding is a reviewed determinism exemption.
+    assert waived, "waivers.txt should hold live exemptions"
+    assert {f.checker for f in waived} == {"determinism"}
+
+
+def test_cli_exits_zero_on_repo(capsys):
+    assert main(["--all", "--root", str(REPO)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Waiver mechanics
+# ---------------------------------------------------------------------------
+
+
+def _mini_tree(tmp_path: Path, source: str,
+               waivers: str | None = None) -> Path:
+    net = tmp_path / "src" / "repro" / "net"
+    net.mkdir(parents=True)
+    (net / "mod.py").write_text(textwrap.dedent(source))
+    if waivers is not None:
+        adir = tmp_path / "src" / "repro" / "analysis"
+        adir.mkdir(parents=True)
+        (adir / common.WAIVERS_FILENAME).write_text(
+            textwrap.dedent(waivers)
+        )
+    return tmp_path
+
+
+def test_waiver_suppresses_matching_finding(tmp_path):
+    root = _mini_tree(
+        tmp_path,
+        """
+        import numpy as np
+        def f():
+            return np.random.default_rng()
+        """,
+        waivers="""
+        determinism src/repro/net/mod.py f unseeded-default-rng -- test exemption
+        """,
+    )
+    unwaived, waived = run(root, ["determinism"])
+    assert unwaived == []
+    assert [f.code for f in waived] == ["unseeded-default-rng"]
+
+
+def test_waiver_is_scope_specific(tmp_path):
+    """A waiver for one function never covers the same violation in
+    another — each site is its own reviewed decision."""
+    root = _mini_tree(
+        tmp_path,
+        """
+        import numpy as np
+        def f():
+            return np.random.default_rng()
+        def g():
+            return np.random.default_rng()
+        """,
+        waivers="""
+        determinism src/repro/net/mod.py f unseeded-default-rng -- only f
+        """,
+    )
+    unwaived, _ = run(root, ["determinism"])
+    assert [(f.scope, f.code) for f in unwaived] == [
+        ("g", "unseeded-default-rng")
+    ]
+
+
+def test_unused_waiver_is_a_finding(tmp_path):
+    root = _mini_tree(
+        tmp_path,
+        "x = 1\n",
+        waivers="""
+        determinism src/repro/net/mod.py f time-read -- fixed long ago
+        """,
+    )
+    unwaived, _ = run(root, ["determinism"])
+    assert codes(unwaived) == {"unused-waiver"}
+
+
+def test_malformed_waiver_is_a_finding(tmp_path):
+    root = _mini_tree(
+        tmp_path,
+        "x = 1\n",
+        waivers="""
+        determinism src/repro/net/mod.py f time-read
+        """,  # no '-- reason'
+    )
+    unwaived, _ = run(root, ["determinism"])
+    assert codes(unwaived) == {"malformed-waiver"}
+
+
+# ---------------------------------------------------------------------------
+# Determinism rules
+# ---------------------------------------------------------------------------
+
+
+def _determinism_codes(tmp_path, source):
+    root = _mini_tree(tmp_path, source)
+    return [f.code for f in determinism.check(root)]
+
+
+def test_determinism_flags_global_and_stdlib_rng(tmp_path):
+    got = _determinism_codes(tmp_path, """
+        import random
+        import numpy as np
+        def f():
+            a = np.random.rand(3)          # legacy global generator
+            b = random.randint(0, 10)      # stdlib global generator
+            return a, b
+    """)
+    assert got == ["global-numpy-rng", "stdlib-random"]
+
+
+def test_determinism_flags_time_env_and_impure_seed(tmp_path):
+    got = _determinism_codes(tmp_path, """
+        import os, time
+        import numpy as np
+        import jax
+        def f():
+            t = time.time()
+            e = os.environ["HOME"]
+            k = jax.random.key(time.time_ns())
+            return t, e, k
+    """)
+    assert "time-read" in got
+    assert "env-read" in got
+    assert "impure-prng-seed" in got
+
+
+def test_determinism_flags_set_iteration_not_sorted(tmp_path):
+    got = _determinism_codes(tmp_path, """
+        def f(xs):
+            for x in set(xs):              # hazard
+                pass
+            a = [y for y in {1, 2, 3}]     # hazard (set literal)
+            b = list(frozenset(xs))        # hazard (materializes order)
+            c = sorted(set(xs))            # fine: canonicalized
+            d = {k: 1 for k in xs}         # fine: dict, insertion order
+            return a, b, c, d
+    """)
+    assert got.count("set-iteration-order") == 3
+    assert len(got) == 3
+
+
+def test_determinism_accepts_seeded_rng(tmp_path):
+    got = _determinism_codes(tmp_path, """
+        import numpy as np
+        def f(seed):
+            rng = np.random.default_rng(seed)
+            g = np.random.default_rng((seed, 7, 0xBEEF))
+            return rng.random(3), g.standard_normal()
+    """)
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# Dtype rules
+# ---------------------------------------------------------------------------
+
+
+def test_dtypes_flags_narrow_types_and_strings(tmp_path):
+    root = _mini_tree(tmp_path, """
+        import numpy as np
+        def f(x):
+            a = np.asarray(x, dtype=np.int32)
+            b = np.zeros(3, dtype="float32")
+            c = x.astype(np.float16)
+            return a, b, c
+    """)
+    got = [f.code for f in dtypes.check(root)]
+    assert got == [
+        "narrow-int-dtype", "narrow-dtype-string", "narrow-float-dtype",
+    ]
+
+
+def test_dtypes_accepts_wide_types(tmp_path):
+    root = _mini_tree(tmp_path, """
+        import numpy as np
+        def f(x):
+            return (np.asarray(x, dtype=np.float64),
+                    np.zeros(3, dtype=np.int64),
+                    np.arange(4, dtype="float64"))
+    """)
+    assert dtypes.check(root) == []
+
+
+def test_dtypes_ignores_learning_half(tmp_path):
+    """float32 wire formats in gossip/compression are out of scope —
+    only pricing paths are scanned."""
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    (core / "gossip.py").write_text(
+        "import jax.numpy as jnp\n"
+        "def g(p):\n    return p.astype(jnp.float32)\n"
+    )
+    assert dtypes.check(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# Parity manifest rules
+# ---------------------------------------------------------------------------
+
+
+def _parity_tree(tmp_path, manifest: str | None, with_test=True,
+                 test_body=None):
+    net = tmp_path / "src" / "repro" / "net"
+    net.mkdir(parents=True)
+    (net / "mod.py").write_text(
+        "def _slow_reference(x):\n    return x\n"
+        "def fast(x):\n    return x\n"
+    )
+    if manifest is not None:
+        adir = tmp_path / "src" / "repro" / "analysis"
+        adir.mkdir(parents=True)
+        (adir / parity.MANIFEST_FILENAME).write_text(
+            textwrap.dedent(manifest)
+        )
+    if with_test:
+        tdir = tmp_path / "tests"
+        tdir.mkdir()
+        (tdir / "test_mod.py").write_text(test_body or (
+            "from repro.net.mod import _slow_reference, fast\n"
+            "def test_parity():\n"
+            "    assert fast(1) == _slow_reference(1)\n"
+        ))
+    return tmp_path
+
+
+def test_parity_green_when_registered(tmp_path):
+    root = _parity_tree(tmp_path, """
+        src/repro/net/mod.py::_slow_reference fast tests/test_mod.py
+    """)
+    assert parity.check(root) == []
+
+
+def test_parity_flags_unregistered_reference(tmp_path):
+    root = _parity_tree(tmp_path, manifest=None)
+    assert codes(parity.check(root)) == {"unregistered-reference"}
+
+
+def test_parity_flags_stale_entry_and_missing_test(tmp_path):
+    root = _parity_tree(tmp_path, """
+        src/repro/net/mod.py::_slow_reference fast tests/test_mod.py
+        src/repro/net/gone.py::_gone_reference fast tests/test_mod.py
+        src/repro/net/mod.py::fast_reference fast tests/test_gone.py
+    """)
+    # Both bad entries are stale (missing file / missing def); the
+    # good first entry stays green, so stale is the only code.
+    findings = parity.check(root)
+    assert codes(findings) == {"stale-manifest-entry"}
+    assert len(findings) == 2
+
+
+def test_parity_flags_test_without_symbols(tmp_path):
+    root = _parity_tree(
+        tmp_path,
+        "src/repro/net/mod.py::_slow_reference fast tests/test_mod.py\n",
+        test_body="def test_unrelated():\n    assert True\n",
+    )
+    assert codes(parity.check(root)) == {"parity-test-lacks-symbol"}
+
+
+def test_parity_via_token_counts_as_mention(tmp_path):
+    root = _parity_tree(
+        tmp_path,
+        "src/repro/net/mod.py::_slow_reference fast tests/test_mod.py "
+        "via=slow\n",
+        test_body=(
+            "def test_engines():\n"
+            "    assert run(engine='slow') == run(engine='fast')\n"
+            "def run(engine):\n    return 0\n"
+        ),
+    )
+    # 'slow' appears as an exact string constant; 'fast' as one too.
+    assert parity.check(root) == []
+
+
+def test_parity_manifest_registers_all_repo_references():
+    """Seed audit: the five existing reference/fast-path pairs are
+    registered and their tests still mention both symbols."""
+    entries, malformed = parity.load_manifest(
+        REPO / "src/repro/analysis" / parity.MANIFEST_FILENAME
+    )
+    assert malformed == []
+    registered = {e.reference for e in entries}
+    assert registered >= {
+        "_simulate_reference",
+        "_route_congestion_aware_reference",
+        "_compute_categories_reference",
+        "_compile_category_incidence_reference",
+        "apply_dense_reference",
+    }
+    assert parity.check(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# Contract-wiring rules
+# ---------------------------------------------------------------------------
+
+
+def test_contracts_static_flags_missing_class(tmp_path):
+    (tmp_path / "src" / "repro" / "net").mkdir(parents=True)
+    got = codes(contracts_static.check(tmp_path))
+    assert got == {"contract-class-missing"}
+
+
+def test_contracts_static_green_on_repo():
+    assert contracts_static.check(REPO) == []

@@ -1,0 +1,203 @@
+"""Runtime CSR contract layer (`repro.analysis.contracts`).
+
+Corrupted-CSR fixtures — non-monotone ptr, out-of-bounds index, wrong
+dtype, mismatched lengths — must each raise a named, actionable
+``ContractViolation`` at construction under ``REPRO_VALIDATE=1``, and
+pass silently when validation is off. Well-formed structures from the
+real pipeline must validate clean on all three contract classes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (
+    ContractViolation,
+    maybe_validate,
+    validation_enabled,
+)
+from repro.net import (
+    build_overlay,
+    compute_categories,
+    lowest_degree_nodes,
+    roofnet_like,
+)
+from repro.net.categories import compile_category_incidence
+from repro.net.demands import demands_from_links
+from repro.net.routing import route
+from repro.net.simulator import CapacityPhase, Scenario, compile_incidence, simulate
+
+KAPPA = 1e6
+M = 6
+LINKS = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0)]
+
+
+@pytest.fixture()
+def validate_on(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE", "1")
+
+
+@pytest.fixture()
+def validate_off(monkeypatch):
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    u = roofnet_like(seed=0)
+    ov = build_overlay(u, lowest_degree_nodes(u, M))
+    cats = compute_categories(ov)
+    demands = demands_from_links(LINKS, KAPPA, M)
+    sol = route(demands, cats, KAPPA, M)
+    return ov, cats, sol
+
+
+def test_validation_flag_semantics(monkeypatch):
+    for value, expect in [("1", True), ("yes", True), ("0", False),
+                          ("", False)]:
+        monkeypatch.setenv("REPRO_VALIDATE", value)
+        assert validation_enabled() is expect
+    monkeypatch.delenv("REPRO_VALIDATE")
+    assert validation_enabled() is False
+
+
+def test_wellformed_pipeline_validates_clean(pipeline, validate_on):
+    """All three structures, built by the real pipeline, pass under
+    REPRO_VALIDATE=1 — including the rescaled per-phase recompile."""
+    ov, cats, sol = pipeline
+    assert cats.flat is not None
+    maybe_validate(cats.flat)  # _FlatCategories
+    inc = compile_category_incidence(cats, M, KAPPA)   # CategoryIncidence
+    inc.rescaled(cats.scaled(0.5))                     # replace() path
+    binc = compile_incidence(sol, ov)                  # BranchIncidence
+    assert binc.num_branches > 0
+    sc = Scenario(capacity_phases=(CapacityPhase(start=4.0, scale=0.5),))
+    r = simulate(sol, ov, scenario=sc)
+    assert np.isfinite(r.makespan)
+
+
+def _cat_corruptions(inc):
+    nnz = inc.entry_link.size
+    return {
+        "non-monotone ptr": (
+            "link_ptr", np.concatenate((inc.link_ptr[:1] + nnz,
+                                        inc.link_ptr[1:])), "ptr"),
+        "out-of-bounds index": (
+            "entry_cat", inc.entry_cat + inc.capacity.size, "index-bounds"),
+        "wrong dtype": (
+            "capacity", inc.capacity.astype(np.float32), "dtype"),
+        "mismatched lengths": (
+            "entry_coef", inc.entry_coef[:-1], "length"),
+        "stale coefficients": (
+            "entry_coef", inc.entry_coef * 2.0, "coef-consistency"),
+        "non-positive capacity": (
+            "capacity", inc.capacity * -1.0, "finite-positive"),
+    }
+
+
+def test_category_incidence_corruptions_raise_named(pipeline, validate_on):
+    _, cats, _ = pipeline
+    inc = compile_category_incidence(cats, M, KAPPA)
+    for label, (field, bad, invariant) in _cat_corruptions(inc).items():
+        with pytest.raises(ContractViolation) as err:
+            dataclasses.replace(inc, **{field: bad})
+        assert invariant in str(err.value), label
+        assert field in str(err.value), label
+        assert err.value.structure == "CategoryIncidence"
+
+
+def test_category_incidence_corruptions_silent_when_off(
+    pipeline, validate_off
+):
+    _, cats, _ = pipeline
+    inc = compile_category_incidence(cats, M, KAPPA)
+    for field, bad, _ in _cat_corruptions(inc).values():
+        dataclasses.replace(inc, **{field: bad})  # must not raise
+
+
+def test_branch_incidence_corruptions_raise_named(pipeline, validate_on):
+    ov, _, sol = pipeline
+    inc = compile_incidence(sol, ov)
+    cases = {
+        "non-monotone ptr": (
+            "branch_ptr", inc.branch_ptr[::-1].copy(), "ptr"),
+        "out-of-bounds edge": (
+            "flat_edge", inc.flat_edge + inc.base_capacity.size,
+            "index-bounds"),
+        "wrong index dtype": (
+            "flat_branch", inc.flat_branch.astype(np.int32), "dtype"),
+        "mismatched lengths": (
+            "edge_branch", inc.edge_branch[:-1], "length"),
+        "float32 capacities": (
+            "base_capacity", inc.base_capacity.astype(np.float32), "dtype"),
+    }
+    for label, (field, bad, invariant) in cases.items():
+        with pytest.raises(ContractViolation) as err:
+            dataclasses.replace(inc, **{field: bad})
+        assert invariant in str(err.value), label
+        assert err.value.structure == "BranchIncidence"
+
+
+def test_branch_incidence_corruptions_silent_when_off(
+    pipeline, validate_off
+):
+    ov, _, sol = pipeline
+    inc = compile_incidence(sol, ov)
+    dataclasses.replace(inc, branch_ptr=inc.branch_ptr[::-1].copy())
+    dataclasses.replace(inc, flat_branch=inc.flat_branch.astype(np.int32))
+
+
+def test_flat_categories_corruptions_raise_named(pipeline, validate_on):
+    _, cats, _ = pipeline
+    flat = cats.flat
+    cases = {
+        "non-monotone ptr": (
+            "link_ptr", flat.link_ptr[::-1].copy(), "ptr"),
+        "out-of-bounds category": (
+            "entry_cat", flat.entry_cat + flat.num_categories,
+            "index-bounds"),
+        "wrong dtype": (
+            "entry_link", flat.entry_link.astype(np.int32), "dtype"),
+        "mismatched lengths": (
+            "entry_cat", flat.entry_cat[:-1], "length"),
+    }
+    # Unsorted entries: swap two categories inside one multi-entry
+    # link's CSR slice — everything else (bounds, dtypes, ptr) stays
+    # valid, only the promised (link, category) sort order breaks.
+    multi = np.flatnonzero(np.diff(flat.entry_link) == 0)
+    assert multi.size, "fixture needs a link with >=2 categories"
+    i = int(multi[0])
+    swapped = flat.entry_cat.copy()
+    swapped[i], swapped[i + 1] = swapped[i + 1], swapped[i]
+    cases["unsorted entries"] = ("entry_cat", swapped, "entries-sorted")
+    for label, (field, bad, invariant) in cases.items():
+        with pytest.raises(ContractViolation) as err:
+            dataclasses.replace(flat, **{field: bad})
+        assert invariant in str(err.value), label
+        assert err.value.structure == "_FlatCategories"
+
+
+def test_ptr_entry_consistency_catches_shifted_entries(
+    pipeline, validate_on
+):
+    """In-bounds, right-dtype, right-length — but the entry array no
+    longer agrees with the pointer's slices: the mismatch incremental
+    incidence *patching* would produce."""
+    _, cats, _ = pipeline
+    inc = compile_category_incidence(cats, M, KAPPA)
+    rolled = np.roll(inc.entry_link, 1)
+    with pytest.raises(ContractViolation) as err:
+        dataclasses.replace(inc, entry_link=rolled)
+    assert "ptr-entry-consistency" in str(err.value) or \
+        "index-bounds" in str(err.value)
+
+
+def test_error_message_is_actionable(pipeline, validate_on):
+    _, cats, _ = pipeline
+    inc = compile_category_incidence(cats, M, KAPPA)
+    with pytest.raises(ContractViolation) as err:
+        dataclasses.replace(inc, capacity=inc.capacity.astype(np.float32))
+    msg = str(err.value)
+    assert "CategoryIncidence.capacity" in msg
+    assert "float64" in msg  # says what well-formed looks like

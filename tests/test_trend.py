@@ -208,3 +208,33 @@ def test_torn_tail_line_tolerated(tmp_path):
         f.write(json.dumps(_rec("a")) + "\n")
         f.write('{"name": "b", "us_per')  # interrupted writer
     assert set(trend.load_records(str(path))) == {"a"}
+
+
+def test_empty_current_with_bench_json_set_fails(tmp_path, capsys,
+                                                 monkeypatch):
+    # $BENCH_JSON set but zero records emitted: the benchmark job is
+    # broken, not "nothing to gate" — the gate must say so and fail.
+    base = _write(tmp_path / "base.jsonl", [_rec("sim_scale")])
+    cur = _write(tmp_path / "cur.jsonl", [])
+    monkeypatch.setenv("BENCH_JSON", "bench-results.jsonl")
+    assert trend.main([base, cur]) == 1
+    out = capsys.readouterr().out
+    assert "$BENCH_JSON" in out and "no benchmark records" in out
+
+
+def test_empty_current_without_bench_json_passes(tmp_path, capsys,
+                                                 monkeypatch):
+    base = _write(tmp_path / "base.jsonl", [_rec("sim_scale")])
+    cur = _write(tmp_path / "cur.jsonl", [])
+    monkeypatch.delenv("BENCH_JSON", raising=False)
+    assert trend.main([base, cur]) == 0
+    assert "nothing to gate" in capsys.readouterr().out
+
+
+def test_missing_current_file_treated_as_empty(tmp_path, monkeypatch):
+    base = _write(tmp_path / "base.jsonl", [_rec("sim_scale")])
+    missing = str(tmp_path / "never_written.jsonl")
+    monkeypatch.delenv("BENCH_JSON", raising=False)
+    assert trend.main([base, missing]) == 0
+    monkeypatch.setenv("BENCH_JSON", "bench-results.jsonl")
+    assert trend.main([base, missing]) == 1

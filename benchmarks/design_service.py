@@ -1,0 +1,275 @@
+"""Design-as-a-service benchmark: replayed Markov link dynamics at
+1000 agents, incremental amendment vs from-scratch redesign, plus a
+chaos variant with pricing faults injected.
+
+Three gates:
+
+  * **event rate** — ``DesignService`` must sustain ≥ ``RATE_TARGET``×
+    the event rate of the scratch pipeline (categories + incidence +
+    FMMD-P + routing re-run per event). Scratch is timed on a sparse
+    checkpoint subset (it is exactly the 490-second-sweep cost the
+    service exists to amortize) and extrapolated per event.
+  * **realized τ** — at every checkpoint the service's deployed τ must
+    be equal-or-better than the scratch redesign's τ on the *same*
+    network state (mean over checkpoints). The service is configured
+    τ-greedy here (zero drift band, long horizon) so any strictly
+    better candidate is adopted; at re-priced events it deploys
+    ``min(incumbent, candidate)`` and can only tie or win.
+  * **chaos** — the same stream replayed with a ``FaultInjector``
+    (raise/timeout/nan/stale at ``CHAOS_RATE``): every event must still
+    produce exactly one record (zero dropped), at least one fault must
+    actually fire, and the mean deployed τ must stay within
+    ``CHAOS_TAU_FACTOR``× of the fault-free run — graceful degradation,
+    not collapse.
+
+The scratch baseline pins the overlay's routing paths (hop-count paths
+are capacity-independent; rebuilding them off a copied graph changes
+BFS tie-breaks, not the metric) so both sides design against the same
+category structure — the comparison measures *incrementality*, not
+path-tie-break luck.
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.design_service \
+      [--agents 1000] [--nodes 1200] [--steps 30] [--iters 8] \
+      [--checkpoint-every 6]
+
+Defaults reproduce the acceptance-scale run; CI smoke can shrink it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.fmmd import fmmd
+from repro.net import (
+    build_overlay,
+    compile_category_incidence,
+    compute_categories,
+    random_geometric_underlay,
+)
+from repro.net.demands import demands_from_links
+from repro.net.routing import route_direct
+from repro.net.stochastic import MarkovLinkModel, StochasticScenario
+from repro.net.topology import OverlayNetwork
+from repro.runtime.design_service import DesignService, ServiceConfig
+from repro.runtime.events import AgentLeave, events_from_stochastic
+from repro.runtime.faultinject import FaultInjector, FaultPlan
+from benchmarks.common import emit
+
+KAPPA = 1e6
+RATE_TARGET = 10.0
+CHAOS_TAU_FACTOR = 1.5
+CHAOS_RATE = 0.3
+
+
+def _overlay(num_nodes: int, num_agents: int, seed: int):
+    # 0.06 is the 1200-node acceptance instance; smaller smoke runs need
+    # a wider radius to stay connected (~n·r² contact rate held roughly
+    # constant).
+    radius = max(0.06, 2.0 / num_nodes**0.5)
+    und = random_geometric_underlay(num_nodes, radius=radius, seed=seed)
+    return build_overlay(
+        und, list(und.graph.nodes)[:num_agents], method="bfs"
+    )
+
+
+def _stream(svc: DesignService, steps: int, seed: int):
+    """Markov dynamics over a spread of category member links, plus
+    hazard-driven churn — the replayable input of the whole benchmark."""
+    links = sorted(
+        {(u, v) if u < v else (v, u)
+         for u, v in svc.categories.edge_capacity}
+    )
+    rng = np.random.default_rng(seed)
+    groups = [
+        tuple(links[i] for i in sorted(
+            rng.choice(len(links), size=min(12, len(links)),
+                       replace=False).tolist()
+        ))
+        for _ in range(4)
+    ]
+    sto = StochasticScenario(
+        links=tuple(
+            MarkovLinkModel(
+                edges=g,
+                scales=(1.0, 0.3),
+                transition=((0.55, 0.45), (0.5, 0.5)),
+            )
+            for g in groups
+        ),
+        step=5.0,
+        horizon=5.0 * steps,
+        churn_agents=(1, 2),
+        churn_hazard=0.01,
+    )
+    return events_from_stochastic(sto, key=seed)
+
+
+def _scratch_redesign(underlay, agent_nodes, scale, iters):
+    """The full per-event pipeline the service amortizes away: regroup
+    categories, recompile the incidence, cold FMMD-P, route. Paths are
+    pinned to the unscaled graph (see module docstring)."""
+    ov = build_overlay(underlay, agent_nodes)
+    if scale:
+        ov = OverlayNetwork(
+            underlay=underlay.with_scaled_capacities(dict(scale)),
+            agents=ov.agents,
+            paths=ov.paths,
+        )
+    m = ov.num_agents
+    cats = compute_categories(ov)
+    inc = compile_category_incidence(cats, m, KAPPA)
+    res = fmmd(
+        m, iters, categories=cats, kappa=KAPPA, priority=True,
+        incidence=inc,
+    )
+    routing = route_direct(
+        demands_from_links(res.activated_links, KAPPA, m), cats, KAPPA
+    )
+    return float(routing.completion_time)
+
+
+def _replay(overlay, events, iters, injector=None):
+    cfg = ServiceConfig(
+        design_iterations=iters,
+        drift_band=0.0,  # τ-greedy: re-price on any realized-τ move
+        horizon_rounds=1e9,
+        transition_rounds=0.0,
+    )
+    svc = DesignService(
+        overlay, kappa=KAPPA, config=cfg, fault_injector=injector
+    )
+    taus = []
+    t0 = time.perf_counter()
+    for ev in events:
+        svc.process(ev)
+        taus.append(svc.tau)
+    elapsed = time.perf_counter() - t0
+    return svc, taus, elapsed
+
+
+def run(agents: int, nodes: int, steps: int, iters: int,
+        checkpoint_every: int, rate_target: float = RATE_TARGET) -> dict:
+    overlay = _overlay(nodes, agents, seed=1)
+    base = DesignService(
+        overlay, kappa=KAPPA,
+        config=ServiceConfig(design_iterations=iters),
+    )
+    events = _stream(base, steps, seed=7)
+    if not events:
+        raise RuntimeError("empty event stream — raise steps")
+
+    # ---- fault-free incremental replay --------------------------------
+    svc, taus_inc, t_inc = _replay(overlay, events, iters)
+    assert len(svc.log) == len(events), "dropped events in replay"
+    rate_inc = len(events) / t_inc
+
+    # ---- scratch checkpoints ------------------------------------------
+    # Walk the stream maintaining (scale map, membership) and rebuild
+    # from scratch at every k-th event; extrapolate the per-event cost.
+    scale: dict = {}
+    node_of = {
+        h: overlay.agents[h] for h in range(overlay.num_agents)
+    }
+    scratch_times, tau_pairs = [], []
+    for k, ev in enumerate(events):
+        if isinstance(ev, AgentLeave):
+            if ev.agent in node_of and len(node_of) > 1:
+                del node_of[ev.agent]
+        else:
+            for e, s in ev.scales.items():
+                key = (e[0], e[1]) if e[0] < e[1] else (e[1], e[0])
+                if s == 1.0:
+                    scale.pop(key, None)
+                else:
+                    scale[key] = s
+        if k % checkpoint_every == 0:
+            t0 = time.perf_counter()
+            tau_scr = _scratch_redesign(
+                overlay.underlay,
+                [node_of[h] for h in sorted(node_of)],
+                scale, iters,
+            )
+            scratch_times.append(time.perf_counter() - t0)
+            tau_pairs.append((taus_inc[k], tau_scr))
+    rate_scr = 1.0 / float(np.mean(scratch_times))
+    speedup = rate_inc / rate_scr
+    mean_inc = float(np.mean([a for a, _ in tau_pairs]))
+    mean_scr = float(np.mean([b for _, b in tau_pairs]))
+
+    # ---- chaos replay --------------------------------------------------
+    injector = FaultInjector(
+        FaultPlan(seed=13, rate=CHAOS_RATE, timeout_seconds=1.0)
+    )
+    svc_c, taus_chaos, _ = _replay(overlay, events, iters, injector)
+    assert len(svc_c.log) == len(events), "chaos run dropped events"
+    n_faults = len(injector.injected)
+    mean_chaos = float(np.mean(taus_chaos))
+    mean_free = float(np.mean(taus_inc))
+
+    emit(
+        "design_service_event_rate",
+        1e6 / rate_inc,
+        f"{rate_inc:.2f} ev/s incremental vs {rate_scr:.3f} ev/s "
+        f"scratch = {speedup:.1f}x (target >= {rate_target}x) over "
+        f"{len(events)} events at m={agents}",
+    )
+    emit(
+        "design_service_realized_tau",
+        1e6 / rate_inc,
+        f"mean tau {mean_inc:.4g} (incremental) vs {mean_scr:.4g} "
+        f"(scratch) over {len(tau_pairs)} checkpoints",
+    )
+    emit(
+        "design_service_chaos",
+        1e6 / rate_inc,
+        f"mean tau {mean_chaos:.4g} chaos vs {mean_free:.4g} fault-free "
+        f"({mean_chaos / max(mean_free, 1e-12):.2f}x, limit "
+        f"{CHAOS_TAU_FACTOR}x), {n_faults} faults injected, "
+        f"decisions {dict(sorted(svc_c.log.decisions.items()))}",
+    )
+
+    assert speedup >= rate_target, (
+        f"incremental event rate only {speedup:.1f}x scratch "
+        f"(target {rate_target}x)"
+    )
+    assert mean_inc <= mean_scr * (1.0 + 1e-9), (
+        f"incremental realized tau {mean_inc:.6g} worse than scratch "
+        f"{mean_scr:.6g}"
+    )
+    assert n_faults > 0, "chaos run injected no faults — plan too weak"
+    assert mean_chaos <= CHAOS_TAU_FACTOR * mean_free, (
+        f"chaos tau {mean_chaos:.6g} exceeds {CHAOS_TAU_FACTOR}x "
+        f"fault-free {mean_free:.6g}"
+    )
+    return {
+        "events": len(events),
+        "speedup": speedup,
+        "mean_tau_incremental": mean_inc,
+        "mean_tau_scratch": mean_scr,
+        "mean_tau_chaos": mean_chaos,
+        "faults": n_faults,
+    }
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--agents", type=int, default=1000)
+    p.add_argument("--nodes", type=int, default=1200)
+    p.add_argument("--steps", type=int, default=30)
+    p.add_argument("--iters", type=int, default=8)
+    p.add_argument("--checkpoint-every", type=int, default=6)
+    # The 10x floor is the m=1000 acceptance gate; scaled-down smoke
+    # runs (where scratch is not yet painful) may pass a lower floor.
+    p.add_argument("--rate-target", type=float, default=RATE_TARGET)
+    a = p.parse_args(argv)
+    run(a.agents, a.nodes, a.steps, a.iters, a.checkpoint_every,
+        rate_target=a.rate_target)
+
+
+if __name__ == "__main__":
+    main()

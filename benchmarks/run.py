@@ -11,6 +11,7 @@ def main() -> None:
     from benchmarks import (
         analysis_bench,
         design_scale,
+        design_service,
         engine_parity,
         fig4_fmmd_variants,
         fig5_training,
@@ -37,6 +38,8 @@ def main() -> None:
         "stochastic_routing": stochastic_routing.main,
         "engine_parity": engine_parity.main,
         "design_scale": design_scale.main,
+        # argv pinned: harness arguments are bench names, not flags
+        "design_service": lambda: design_service.main([]),
         "analysis_bench": analysis_bench.main,
     }
     names = sys.argv[1:] or list(all_benches)

@@ -1,58 +1,92 @@
-"""Elastic membership demo: agents leave AND join during training; each
-event re-runs the paper's design on the new overlay and re-maps state.
+"""Elastic membership demo on the design-as-a-service loop: training
+continues while a replayed event stream degrades links, drops agents,
+and adds one — and one redesign happens during a *pricing outage*
+(injected fault), exercising the incumbent-keep degradation tier
+instead of crashing the run.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_dpsgd_step, mixing, replicate_for_agents
+from repro.core import make_dpsgd_step, mixing
 from repro.net import build_overlay, lowest_degree_nodes, roofnet_like
-from repro.runtime.fault_tolerance import (
-    FaultToleranceController,
-    grow_state,
-)
+from repro.runtime.design_service import DesignService, ServiceConfig
+from repro.runtime.events import AgentJoin, AgentLeave, LinkStateChange
+from repro.runtime.fault_tolerance import grow_state, shrink_state
+from repro.runtime.faultinject import FaultInjector, FaultPlan
 
 
 def main() -> None:
     m = 8
     u = roofnet_like(seed=0)
     ov = build_overlay(u, lowest_degree_nodes(u, m))
-    ftc = FaultToleranceController(ov, kappa=1e6)
+    svc = DesignService(
+        ov, kappa=1e6, config=ServiceConfig(design_iterations=12)
+    )
+    print(f"start: m={svc.num_agents} rho={mixing.rho(svc.design):.3f} "
+          f"tau={svc.tau:.3g}s")
+
+    # The replayed stream: capacities sag, two agents depart (the first
+    # while the pricing service is down), one joins, the links recover.
+    worst = sorted(svc._binc.edges)[:3]
+    free_node = next(
+        n for n in sorted(u.graph.nodes) if n not in set(ov.agents)
+    )
+    events = [
+        LinkStateChange(time=1.0, scales={e: 0.3 for e in worst}),
+        AgentLeave(time=2.0, agent=1),   # pricing outage active here
+        AgentLeave(time=3.0, agent=5),
+        AgentJoin(time=4.0, node=free_node),
+        LinkStateChange(time=5.0, scales={e: 1.0 for e in worst}),
+    ]
+    outage_at = 2.0  # every pricing attempt raises while processing this
 
     # toy objective: agents pull their value to per-agent targets
-    targets = jnp.arange(m, dtype=jnp.float32)[:, None]
+    targets = jnp.arange(16, dtype=jnp.float32)[:, None]
     loss_fn = lambda p, b: jnp.mean((p["x"] - b) ** 2)
     step_fn = make_dpsgd_step(loss_fn, learning_rate=0.05)
     params = {"x": jnp.zeros((m, 1))}
-    from repro.launch.fabric import design_mixing_matrix
 
-    w, design0 = design_mixing_matrix(m, kappa_bytes=1e6)
-    print(f"start: m={m} rho={mixing.rho(w):.3f}")
-
-    for k in range(240):
-        params, loss = step_fn(
-            params, targets[: params["x"].shape[0]],
-            jnp.asarray(w, jnp.float32), jnp.asarray(k),
+    k = 0
+    for ev in events:
+        for _ in range(40):  # train between events
+            cur_m = params["x"].shape[0]
+            params, _ = step_fn(
+                params, targets[:cur_m],
+                jnp.asarray(svc.design, jnp.float32), jnp.asarray(k),
+            )
+            k += 1
+        if ev.time == outage_at:
+            svc.injector = FaultInjector(
+                FaultPlan(seed=0, rate=1.0, modes=("raise",)),
+                clock=svc.clock,
+            )
+        members_before = svc.members
+        rec = svc.process(ev)
+        svc.injector = None
+        # re-map the stacked state to the new membership
+        if isinstance(ev, AgentLeave) and svc.members != members_before:
+            keep = tuple(
+                p for p, h in enumerate(members_before)
+                if h in set(svc.members)
+            )
+            params = shrink_state(params, keep, len(members_before))
+        elif isinstance(ev, AgentJoin) and svc.members != members_before:
+            params = grow_state(params, svc.num_agents)
+        print(
+            f"[step {k}] {rec.event}: {rec.decision} ({rec.tier}) "
+            f"m={svc.num_agents} rho={mixing.rho(svc.design):.3f} "
+            f"tau={svc.tau:.3g}s"
+            + (f" retries={rec.retries} faults={len(rec.faults)}"
+               if rec.faults else "")
+            + f" -- {rec.detail}"
         )
-        if k == 80:
-            params, w, _ = ftc.handle_failures((1, 5), params, step=k)
-            print(f"[{k}] agents 1,5 failed -> m={w.shape[0]} "
-                  f"rho={mixing.rho(w):.3f}")
-        if k == 160:
-            new_m = w.shape[0] + 2
-            params = grow_state(params, new_m)
-            # rejoin: design for the enlarged membership
-            from repro.runtime.fault_tolerance import redesign_after_failure
 
-            alive = tuple(range(new_m))
-            w, _, _ = redesign_after_failure(ov, alive, kappa=1e6)
-            print(f"[{k}] 2 agents joined -> m={new_m} "
-                  f"rho={mixing.rho(w):.3f}")
     print(f"final values: {np.asarray(params['x']).ravel().round(2)}")
-    print(f"events: {[(e.step, e.failed) for e in ftc.events]}")
+    print(f"decision trail: {svc.log.decisions}")
+    print(f"tiers hit: {svc.log.tiers}")
 
 
 if __name__ == "__main__":

@@ -171,6 +171,9 @@ class _PriorityState:
         )
         # Running per-atom max of κ·(t_F+δ)/C_F (−inf for category-free
         # atoms, like the reference table's fill value).
+        self._rebuild_atom_max()
+
+    def _rebuild_atom_max(self) -> None:
         self._atom_max = np.full(self._num_atoms, -np.inf)
         if self.entry_atom.size:
             np.maximum.at(
@@ -179,6 +182,37 @@ class _PriorityState:
                 * (self.loads[self.entry_cat] + self.entry_delta)
                 / self.cap[self.entry_cat],
             )
+
+    def reset(
+        self, incidence: CategoryIncidence | None = None
+    ) -> "_PriorityState":
+        """Warm-start for a fresh FMMD run, optionally rebinding to a
+        capacity-only rescale/patch of the compiled incidence.
+
+        The atom→category entry arrays are capacity-independent (family
+        structure is pinned by routing paths), so after a
+        ``LinkStateChange`` the service loop reuses them verbatim: only
+        ``cap`` is swapped, the selected loads zeroed, and the per-atom
+        maxima rebuilt with the same vector op ``__init__`` uses — the
+        expensive CSR gather + unique over every (atom, category) pair
+        is skipped. Bitwise-identical to constructing a cold state from
+        the patched incidence (property-tested). Returns ``self``.
+        """
+        if incidence is not None:
+            if (
+                incidence.num_agents != self._m
+                or incidence.num_categories != self.num_categories
+                or incidence.kappa != self.kappa
+            ):
+                raise ValueError(
+                    "reset incidence must be a capacity-only rescale of "
+                    "the compiled structure (same m, #categories, κ)"
+                )
+            self.cap = incidence.capacity
+            self._inc = incidence
+        self.loads = np.zeros(self.num_categories)
+        self._rebuild_atom_max()
+        return self
 
     def select(self, atom: tuple[int, int]) -> None:
         """Account (i, j) and (j, i) loads for a newly selected atom."""
@@ -225,6 +259,7 @@ def fmmd(
     priority: bool = False,
     allowed_links: Sequence[tuple[int, int]] | None = None,
     incidence: CategoryIncidence | None = None,
+    warm_state: "_PriorityState | None" = None,
 ) -> FMMDResult:
     """Run FMMD (Alg. 1) with optional -W / -P improvements.
 
@@ -233,6 +268,14 @@ def fmmd(
     when ``priority=True`` (the τ̄ bound needs network knowledge);
     ``incidence`` (a matching precompiled ``CategoryIncidence``) skips
     the priority filter's category compilation, e.g. across a sweep.
+    ``warm_state`` (a ``_PriorityState`` the caller already ``reset()``)
+    skips the priority filter's atom→category flattening entirely — the
+    incremental-redesign path: after a capacity-only network change the
+    service loop rebinds the incumbent state to the patched incidence
+    and re-runs the design with zero structural setup. The caller owns
+    the contract that the state was built for the SAME atom list, m,
+    and κ (atom count and m are checked; atom identity cannot be
+    cheaply verified).
     """
     if priority and categories is None:
         raise ValueError("FMMD-P needs categories (τ̄ bound)")
@@ -251,10 +294,22 @@ def fmmd(
     num_atoms = len(atoms)
     atoms_ij = np.asarray(atoms, dtype=np.int64).reshape(-1, 2)
     ai, aj = atoms_ij[:, 0], atoms_ij[:, 1]
-    prio = (
-        _PriorityState(atoms, m, categories, kappa, incidence=incidence)
-        if priority else None
-    )
+    prio = None
+    if priority:
+        if warm_state is not None:
+            if warm_state._num_atoms != num_atoms or warm_state._m != m:
+                raise ValueError(
+                    f"warm_state was built for {warm_state._num_atoms} "
+                    f"atoms at m={warm_state._m}, this run has "
+                    f"{num_atoms} atoms at m={m}"
+                )
+            if warm_state.kappa != kappa:
+                raise ValueError("warm_state κ does not match")
+            prio = warm_state
+        else:
+            prio = _PriorityState(
+                atoms, m, categories, kappa, incidence=incidence
+            )
     # Persistent unselected-atom mask, flipped on selection — replaces
     # the per-iteration O(|atoms|) ``np.fromiter`` set-membership
     # rebuild. ``atoms`` may contain duplicate values (caller-supplied

@@ -392,16 +392,12 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
 
     Vectorized: all (overlay-link, underlay-edge) incidence pairs come
     from one ``OverlayNetwork.batched_path_edges`` call as flat int
-    arrays, one fused-key sort groups them per directed edge (links
-    ascending within each edge), and edges sharing a link-set signature
-    — compared as the sorted-id byte string, which is set equality —
-    collapse into one family. Ordering is reproduced exactly: edges are
-    ranked by their first traversal (``min`` rank per edge), families by
-    their first edge, matching the reference's dict insertion orders, so
-    the result is bitwise-identical to ``_compute_categories_reference``
-    (property-tested) including family-key iteration order. The result
-    carries the ``_FlatCategories`` payload that lets
-    ``compile_category_incidence`` skip its Python loop.
+    arrays, then ``_group_category_pairs`` groups them per directed edge
+    and collapses equal link-set signatures into families — bitwise
+    identical to ``_compute_categories_reference`` (property-tested)
+    including family-key iteration order. The result carries the
+    ``_FlatCategories`` payload that lets ``compile_category_incidence``
+    skip its Python loop.
     """
     m = overlay.num_agents
     # The array path encodes node ids into int64 edge codes; anything
@@ -416,6 +412,40 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
     ):
         return _compute_categories_reference(overlay)
     link_arr, eu, ev, rank = overlay.batched_path_edges()
+    return _group_category_pairs(
+        m, link_arr, eu, ev, rank, overlay.underlay.capacity
+    )
+
+
+def _group_category_pairs(
+    m: int,
+    link_arr: np.ndarray,
+    eu: np.ndarray,
+    ev: np.ndarray,
+    rank: np.ndarray,
+    cap_of,
+) -> Categories:
+    """Group flat (directed-overlay-link, directed-underlay-edge) pairs
+    into ``Categories`` — the vectorized core of ``compute_categories``.
+
+    ``link_arr`` holds dense directed-link ids ``i·(m−1) + j − [j > i]``,
+    ``(eu, ev)`` the traversed directed edge per pair, and ``rank`` any
+    key whose *order* reproduces the reference's link-major per-hop
+    traversal order (only relative order matters — edges are ranked by
+    first traversal, families by first edge). ``cap_of(u, v)`` returns
+    the effective capacity of a directed edge.
+
+    One fused-key sort groups pairs per directed edge (links ascending
+    within each edge), and edges sharing a link-set signature — compared
+    as the sorted-id byte string, which is set equality — collapse into
+    one family. Exposed separately from ``compute_categories`` so the
+    incremental-redesign service (``runtime/design_service.py``) can
+    regroup a *cached* pair set after membership churn without
+    recomputing any routing paths: filtering the pair arrays of a
+    departed agent (or appending a joiner's) and regrouping is
+    bitwise-identical to recomputing on the rebuilt overlay
+    (property-tested in tests/test_design_service.py).
+    """
     if not link_arr.size:
         return Categories(members={}, capacity={}, edge_capacity={})
     n_nodes = int(max(eu.max(), ev.max())) + 1
@@ -449,7 +479,6 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
     grid = np.empty(m * m, dtype=object)
     grid[:] = list(itertools.product(range(m), repeat=2))
     link_obj = grid[~np.eye(m, dtype=bool).ravel()]
-    cap_of = overlay.underlay.capacity
     # Per unique directed edge (in sorted-segment position): node pair
     # as Python ints, decoded in one vector pass.
     seg_code = code_s[starts]
@@ -521,6 +550,171 @@ def compute_categories(overlay: OverlayNetwork) -> Categories:
         capacity=dict(zip(fam_keys, fam_cap)),
         edge_capacity=edge_capacity,
         flat=flat,
+    )
+
+
+def edge_category_index(categories: Categories) -> dict:
+    """Directed member edge → tuple of family indices containing it.
+
+    The lookup structure incremental capacity patching runs off: a
+    ``LinkStateChange`` names underlay edges, and only the families that
+    contain a changed edge need their C_F re-derived. Built once per
+    category *structure* (membership epoch); capacity-only patches keep
+    it valid because ``patch_categories_capacity`` never moves an edge
+    between families.
+    """
+    index: dict[tuple[int, int], list[int]] = {}
+    for fi, edges in enumerate(categories.members.values()):
+        for e in edges:
+            index.setdefault(e, []).append(fi)
+    return {e: tuple(v) for e, v in index.items()}
+
+
+def patch_categories_capacity(
+    categories: Categories,
+    changed: Mapping,
+    edge_index: Mapping | None = None,
+) -> "tuple[Categories, np.ndarray]":
+    """Re-derive only the touched C_F after a per-edge capacity change.
+
+    ``changed`` maps directed underlay edges (as stored in
+    ``categories.edge_capacity``) to their new *absolute* effective
+    capacities. Family structure is capacity-independent (routing is
+    hop-count), so ``members``/``flat`` are shared unchanged and only the
+    families containing a changed edge — found via ``edge_index``
+    (``edge_category_index``; rebuilt here when not supplied) — get
+    their bottleneck min re-derived, in stored member-edge order, which
+    is the reference's traversal order. The result is bitwise-identical
+    to ``compute_categories`` on the mutated underlay (property-tested),
+    at O(changed members) instead of O(all pairs).
+
+    Returns ``(patched, touched)`` where ``touched`` is the sorted int64
+    array of re-derived family indices (what
+    ``patch_category_incidence`` needs). Requires ground-truth
+    categories (``compute_categories``); inferred categories withhold
+    members/edge capacities and raise.
+    """
+    if categories.edge_capacity is None or not all(
+        categories.members.values()
+    ):
+        raise ValueError(
+            "capacity patching needs ground-truth members and edge "
+            "capacities (compute_categories); inferred categories "
+            "cannot re-derive per-family bottlenecks"
+        )
+    unknown = [e for e in changed if e not in categories.edge_capacity]
+    if unknown:
+        raise ValueError(
+            f"changed edges {unknown[:4]} are not member edges of any "
+            "category — non-traversed edges never constrain and need no "
+            "patch (filter against edge_category_index first)"
+        )
+    if edge_index is None:
+        edge_index = edge_category_index(categories)
+    touched_set = {
+        fi for e in changed for fi in edge_index.get(e, ())
+    }
+    touched = np.asarray(sorted(touched_set), dtype=np.int64)
+    edge_capacity = dict(categories.edge_capacity)
+    for e, c in changed.items():
+        edge_capacity[e] = float(c)
+    if any(edge_capacity[e] <= 0 for e in changed):
+        raise ValueError("patched capacities must be positive")
+    members = list(categories.members.items())
+    capacity = dict(categories.capacity)
+    for fi in touched.tolist():
+        F, edges = members[fi]
+        # Same incremental min, in member (= traversal) order, as the
+        # from-scratch grouping loop.
+        c = np.inf
+        for e in edges:
+            c = min(c, edge_capacity[e])
+        capacity[F] = c
+    return (
+        Categories(
+            members=categories.members,
+            capacity=capacity,
+            edge_capacity=edge_capacity,
+            flat=categories.flat,  # capacity-independent, shared
+        ),
+        touched,
+    )
+
+
+def category_entry_order(
+    incidence: CategoryIncidence,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Category-major CSR view over an incidence's entry positions.
+
+    Returns ``(order, ptr)``: ``order[ptr[F]:ptr[F+1]]`` are the entry
+    positions of family F. Built once per structure epoch so
+    ``patch_category_incidence`` touches exactly the entries of the
+    families a capacity event changed instead of re-gathering all nnz.
+    """
+    order = np.argsort(incidence.entry_cat, kind="stable")
+    ptr = np.concatenate(
+        (
+            np.zeros(1, dtype=np.int64),
+            np.cumsum(
+                np.bincount(
+                    incidence.entry_cat,
+                    minlength=incidence.num_categories,
+                ),
+                dtype=np.int64,
+            ),
+        )
+    )
+    return order, ptr
+
+
+def patch_category_incidence(
+    incidence: CategoryIncidence,
+    categories: Categories,
+    touched: np.ndarray,
+    entry_index: tuple[np.ndarray, np.ndarray] | None = None,
+) -> CategoryIncidence:
+    """Patch an incidence in place of a full recompile after a
+    capacity-only change.
+
+    ``categories`` is the ``patch_categories_capacity`` output and
+    ``touched`` its re-derived family indices: only those rows of
+    ``capacity`` move, and only the entries belonging to them (located
+    via ``entry_index`` from ``category_entry_order``; rebuilt here when
+    not supplied) get their κ/C_F coefficient recomputed — the same
+    elementwise float64 division the full compile performs, so the
+    result is bitwise-identical to ``compile_category_incidence`` on the
+    patched categories (property-tested). Runs through
+    ``dataclasses.replace``, so the CSR contracts re-validate the
+    patched structure under ``REPRO_VALIDATE=1``.
+    """
+    touched = np.asarray(touched, dtype=np.int64)
+    caps = list(categories.capacity.values())
+    if len(caps) != incidence.num_categories:
+        raise ValueError(
+            f"patched categories have {len(caps)} families, incidence "
+            f"was compiled for {incidence.num_categories}"
+        )
+    if not touched.size:
+        return dataclasses.replace(incidence, source=categories)
+    cap = incidence.capacity.copy()
+    cap[touched] = np.asarray(
+        [caps[fi] for fi in touched.tolist()], dtype=np.float64
+    )
+    coef = incidence.entry_coef.copy()
+    if entry_index is None:
+        entry_index = category_entry_order(incidence)
+    order, ptr = entry_index
+    starts = ptr[touched]
+    lens = ptr[touched + 1] - starts
+    total = int(lens.sum())
+    if total:
+        cum = np.concatenate(([0], np.cumsum(lens)[:-1]))
+        pos = order[
+            np.arange(total) + np.repeat(starts - cum, lens)
+        ]
+        coef[pos] = incidence.kappa / cap[incidence.entry_cat[pos]]
+    return dataclasses.replace(
+        incidence, capacity=cap, entry_coef=coef, source=categories
     )
 
 

@@ -235,6 +235,31 @@ class BranchIncidence:
             self.flat_edge[mask], minlength=self.num_edges
         ).astype(np.float64)
 
+    def with_capacities(self, changed: Mapping) -> "BranchIncidence":
+        """Patch base capacities of the named directed edges in place of
+        a full recompile.
+
+        ``changed`` maps directed underlay edges to new *absolute*
+        capacities; edges this incidence never indexes (no branch
+        crosses them, so they can never constrain) are ignored. The
+        branch×edge structure — the expensive Python half of
+        ``compile_incidence`` — is shared untouched; only the [E]
+        capacity vector is rebuilt, so the incremental-redesign service
+        re-prices an in-flight round under a ``LinkStateChange`` at
+        O(changed edges). Runs through ``dataclasses.replace``, so the
+        CSR contracts re-validate under ``REPRO_VALIDATE=1``.
+        """
+        cap = self.base_capacity.copy()
+        for e, c in changed.items():
+            idx = self.edge_index.get(e)
+            if idx is not None:
+                if c <= 0:
+                    raise ValueError(
+                        f"patched capacity for edge {e} must be positive"
+                    )
+                cap[idx] = float(c)
+        return dataclasses.replace(self, base_capacity=cap)
+
 
 def compile_incidence(
     sol: RoutingSolution,
@@ -1005,6 +1030,7 @@ def simulate(
     max_events: int = 100_000,
     scenario: Scenario | None = None,
     engine: str = "batched",
+    incidence: BranchIncidence | None = None,
 ) -> SimResult:
     """Simulate completion of all multicast demands under ``sol``.
 
@@ -1018,22 +1044,38 @@ def simulate(
     tie-break order — bitwise-identical to "reference",
     property-tested), or "reference" (original dict loops, the
     scenario-free pure-Python escape hatch).
+    incidence: a precompiled ``BranchIncidence`` for ``sol`` over
+    ``overlay`` (possibly capacity-patched via ``with_capacities``),
+    skipping branch enumeration + ``compile_incidence`` — the design
+    service's repeated-transition-pricing fast path. The caller owns
+    the claim that it matches ``sol``/``overlay``.
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")
     if engine not in ("vectorized", "batched", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
+    if incidence is not None and engine == "reference":
+        raise ValueError(
+            "a precompiled incidence requires a vectorized engine"
+        )
     for h, (demand, tree) in enumerate(zip(sol.demands, sol.trees)):
         if not tree:
             raise ValueError(
                 f"demand {h} (source {demand.source}) has an empty routing "
                 "tree; route it before simulating"
             )
+    if scenario is not None and scenario.is_trivial:
+        scenario = None
+    if incidence is not None:
+        if incidence.num_branches == 0:
+            return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
+        return _simulate_vectorized(
+            sol, overlay, incidence, fairness, max_events, scenario,
+            batched=(engine == "batched"),
+        )
     branches = sol.unicast_branches(overlay)
     if not branches:
         return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
-    if scenario is not None and scenario.is_trivial:
-        scenario = None
     if engine == "reference":
         if scenario is not None:
             raise ValueError(

@@ -275,3 +275,46 @@ class StochasticScenario:
         the contract ``evaluate_design(stochastic_rollouts=N)`` uses, so
         rollout r of a sweep is reproducible in isolation."""
         return tuple(self.sample((seed, r)) for r in range(n))
+
+
+def realization_deltas(
+    scenario: Scenario,
+) -> tuple[tuple[float, dict[tuple[int, int], float]], ...]:
+    """Event-source a sampled realization: per capacity phase, the edges
+    whose effective scale *changed* at that boundary.
+
+    ``StochasticScenario.sample`` emits minimal piecewise-constant
+    phases, but each phase carries the full *absolute* scale map. The
+    design service wants deltas — only the links that actually moved —
+    so it can absorb or patch per touched edge instead of re-scanning
+    the whole map. Each returned entry is ``(time, {edge: new_scale})``
+    where ``new_scale`` is the absolute multiplier vs base capacity
+    (1.0 means the edge recovered). Edges inside each delta are emitted
+    in sorted order so downstream iteration is deterministic.
+
+    Only scalar-1.0 phases (all-clear recovery, the only scalar form
+    ``sample`` emits) and per-edge maps are accepted; a scalar phase
+    with scale != 1.0 would need the underlay edge set to expand and is
+    rejected.
+    """
+    deltas: list[tuple[float, dict[tuple[int, int], float]]] = []
+    prev: dict[tuple[int, int], float] = {}
+    for phase in scenario.capacity_phases:
+        if isinstance(phase.scale, (int, float)):
+            if float(phase.scale) != 1.0:
+                raise ValueError(
+                    "realization_deltas needs per-edge scale maps; got a "
+                    f"scalar phase with scale={phase.scale!r}"
+                )
+            cur: dict[tuple[int, int], float] = {}
+        else:
+            cur = {e: float(s) for e, s in phase.scale.items()}
+        changed = {
+            e: cur.get(e, 1.0)
+            for e in sorted({*prev, *cur})
+            if cur.get(e, 1.0) != prev.get(e, 1.0)
+        }
+        if changed:
+            deltas.append((float(phase.start), changed))
+        prev = cur
+    return tuple(deltas)

@@ -1,3 +1,10 @@
-"""Runtime: fault tolerance, straggler mitigation, compression."""
+"""Runtime: fault tolerance, design service, stragglers, compression."""
 
-from repro.runtime import compression, fault_tolerance, stragglers
+from repro.runtime import (
+    compression,
+    design_service,
+    events,
+    fault_tolerance,
+    faultinject,
+    stragglers,
+)

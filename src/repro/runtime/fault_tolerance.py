@@ -52,8 +52,14 @@ def redesign_after_failure(
     """Re-run the paper's pipeline on the surviving agents."""
     m = len(alive)
     if m == 1:
+        # A single survivor has no overlay links, hence no nonempty
+        # categories — return the valid empty structure the signature
+        # promises (``compute_categories`` on a 1-agent overlay yields
+        # exactly this), not None.
         w = np.ones((1, 1))
-        return w, build_schedule(w), None
+        return w, build_schedule(w), Categories(
+            members={}, capacity={}, edge_capacity={}
+        )
     sub = build_overlay(
         overlay.underlay, [overlay.agents[a] for a in alive]
     )
@@ -208,6 +214,7 @@ class FaultToleranceController:
         kappa: float,
         price_transitions: bool = True,
         transition_routing_rounds: int = 2,
+        clock: Callable[[], float] = time.perf_counter,
     ):
         self.overlay = overlay
         self.kappa = kappa
@@ -215,6 +222,10 @@ class FaultToleranceController:
         self.events: list[RecoveryEvent] = []
         self.price_transitions = price_transitions
         self._routing_rounds = transition_routing_rounds
+        # Injectable for deterministic tests / the virtual-clock service
+        # loop; the default attribute reference is what the determinism
+        # lint permits (no direct wall-clock *calls* in handlers).
+        self._clock = clock
         self._cur_overlay = overlay
         self._cur_routing = None  # lazily routed per membership epoch
 
@@ -286,12 +297,12 @@ class FaultToleranceController:
         survivors = tuple(a for a in self.alive if a not in failed)
         if not survivors:
             raise RuntimeError("all agents failed")
-        t_price = time.perf_counter()
+        t_price = self._clock()
         transition_tau, cancelled = (
             self._price_transition(tuple(failed), failure_times)
             if self.price_transitions else (float("nan"), 0)
         )
-        t0 = time.perf_counter()  # redesign timing excludes the pricing
+        t0 = self._clock()  # redesign timing excludes the pricing
         pricing_seconds = t0 - t_price
         # state rows are indexed by position within current alive set
         keep_pos = tuple(
@@ -313,7 +324,7 @@ class FaultToleranceController:
                 failed=tuple(failed),
                 survivors=survivors,
                 new_rho=mixing_lib.rho(w) if w.shape[0] > 1 else 0.0,
-                redesign_seconds=time.perf_counter() - t0,
+                redesign_seconds=self._clock() - t0,
                 transition_tau=transition_tau,
                 cancelled_exchanges=cancelled,
                 pricing_seconds=pricing_seconds,

@@ -1,0 +1,711 @@
+"""Design-as-a-service: incremental patching (bitwise vs scratch),
+warm-started FMMD-P, the event loop's decision policy, and every
+degradation tier (incumbent-keep, scratch-rebuild, quarantine) asserted
+through the ``ServiceLog`` decision trail."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis.contracts import ContractViolation
+from repro.core import mixing
+from repro.core.fmmd import _PriorityState, fmmd
+from repro.net import build_overlay, lowest_degree_nodes, roofnet_like
+from repro.net.categories import (
+    compile_category_incidence,
+    compute_categories,
+    edge_category_index,
+    patch_categories_capacity,
+    patch_category_incidence,
+)
+from repro.net.simulator import compile_incidence, simulate
+from repro.net.stochastic import (
+    MarkovLinkModel,
+    StochasticScenario,
+    realization_deltas,
+)
+from repro.net.topology import OverlayNetwork
+from repro.runtime import design_service as ds
+from repro.runtime.design_service import (
+    DesignService,
+    ServiceConfig,
+    VirtualClock,
+)
+from repro.runtime.events import (
+    AgentJoin,
+    AgentLeave,
+    LinkStateChange,
+    events_from_stochastic,
+    malformed_reason,
+)
+from repro.runtime.faultinject import (
+    FaultInjector,
+    FaultPlan,
+    PricingFault,
+)
+
+KAPPA = 1e6
+
+
+@pytest.fixture(params=["0", "1"], ids=["plain", "validated"])
+def validate_mode(request, monkeypatch):
+    """Run a test both plain and under REPRO_VALIDATE=1."""
+    monkeypatch.setenv("REPRO_VALIDATE", request.param)
+    return request.param
+
+
+def _scaled_reference(overlay, scale):
+    """Ground truth for a capacity-only change: the overlay's routing
+    paths are pinned (a LinkStateChange does not re-route), so the
+    scratch recompute keeps the paths and mutates only capacities."""
+    und = overlay.underlay.with_scaled_capacities(scale)
+    return compute_categories(
+        OverlayNetwork(
+            underlay=und, agents=overlay.agents, paths=overlay.paths
+        )
+    )
+
+
+def _assert_cats_bitwise(a, b):
+    assert list(a.capacity.keys()) == list(b.capacity.keys())
+    assert a.members == b.members
+    for F in a.capacity:
+        assert a.capacity[F] == b.capacity[F]
+    assert a.edge_capacity == b.edge_capacity
+
+
+def _assert_inc_bitwise(a, b):
+    for f in ("capacity", "entry_link", "entry_cat", "entry_coef",
+              "link_ptr"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+# ---------------------------------------------------------------------------
+# Satellite: patch vs recompile, bitwise (plain AND REPRO_VALIDATE=1)
+# ---------------------------------------------------------------------------
+
+
+def test_patch_matches_recompile_bitwise(
+    roofnet_overlay, roofnet_categories, validate_mode
+):
+    cats = roofnet_categories
+    inc = compile_category_incidence(
+        cats, roofnet_overlay.num_agents, KAPPA
+    )
+    edge_index = edge_category_index(cats)
+    # Physical (undirected) links: a scale change hits BOTH member
+    # directions, exactly as ``with_scaled_capacities`` would.
+    links = sorted(
+        {(u, v) if u < v else (v, u) for u, v in cats.edge_capacity}
+    )
+    rng = np.random.default_rng(int(validate_mode))
+    for case in range(6):
+        k = int(rng.integers(1, len(links)))
+        picked = [
+            links[i]
+            for i in sorted(
+                rng.choice(len(links), size=k, replace=False).tolist()
+            )
+        ]
+        und_scale = {
+            e: float(s)
+            for e, s in zip(
+                picked, rng.uniform(0.2, 2.5, size=len(picked))
+            )
+        }
+        changed = {
+            d: roofnet_overlay.underlay.capacity(*d) * s
+            for (u, v), s in und_scale.items()
+            for d in ((u, v), (v, u))
+            if d in cats.edge_capacity
+        }
+        patched, touched = patch_categories_capacity(
+            cats, changed, edge_index
+        )
+        patched_inc = patch_category_incidence(
+            inc, patched, touched
+        )
+        ref = _scaled_reference(roofnet_overlay, und_scale)
+        _assert_cats_bitwise(patched, ref)
+        _assert_inc_bitwise(
+            patched_inc,
+            compile_category_incidence(
+                ref, roofnet_overlay.num_agents, KAPPA
+            ),
+        )
+        # _FlatCategories payload is shared, not recomputed.
+        assert patched.flat is cats.flat
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_patch_property_random_subsets(seed):
+    und = roofnet_like(seed=1)
+    ov = build_overlay(und, lowest_degree_nodes(und, 6))
+    cats = compute_categories(ov)
+    inc = compile_category_incidence(cats, 6, KAPPA)
+    links = sorted(
+        {(u, v) if u < v else (v, u) for u, v in cats.edge_capacity}
+    )
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, min(len(links), 8) + 1))
+    picked = [
+        links[i]
+        for i in sorted(
+            rng.choice(len(links), size=k, replace=False).tolist()
+        )
+    ]
+    und_scale = {
+        e: float(s)
+        for e, s in zip(picked, rng.uniform(0.1, 3.0, size=k))
+    }
+    changed = {
+        d: und.capacity(*d) * s
+        for (u, v), s in und_scale.items()
+        for d in ((u, v), (v, u))
+        if d in cats.edge_capacity
+    }
+    patched, touched = patch_categories_capacity(cats, changed)
+    patched_inc = patch_category_incidence(inc, patched, touched)
+    ref = _scaled_reference(ov, und_scale)
+    _assert_cats_bitwise(patched, ref)
+    _assert_inc_bitwise(
+        patched_inc, compile_category_incidence(ref, 6, KAPPA)
+    )
+
+
+def test_patch_rejects_unknown_and_nonpositive(roofnet_categories):
+    with pytest.raises(ValueError, match="not member edges"):
+        patch_categories_capacity(
+            roofnet_categories, {(987, 986): 1.0}
+        )
+    e = sorted(roofnet_categories.edge_capacity)[0]
+    with pytest.raises(ValueError, match="positive"):
+        patch_categories_capacity(roofnet_categories, {e: 0.0})
+
+
+def test_branch_incidence_capacity_patch_matches_scratch(
+    roofnet_overlay, roofnet_categories, validate_mode
+):
+    """Patched BranchIncidence prices the in-flight round identically to
+    a from-scratch compile on the mutated network."""
+    from repro.net.demands import demands_from_links
+    from repro.net.routing import route_direct
+
+    m = roofnet_overlay.num_agents
+    design = fmmd(
+        m, 12, categories=roofnet_categories, kappa=KAPPA,
+        priority=True,
+    )
+    sol = route_direct(
+        demands_from_links(design.activated_links, KAPPA, m),
+        roofnet_categories,
+        KAPPA,
+    )
+    binc = compile_incidence(sol, roofnet_overlay)
+    picked = sorted(
+        {(u, v) if u < v else (v, u) for u, v in binc.edges}
+    )[:4]
+    changed = {
+        d: roofnet_overlay.underlay.capacity(*d) * 0.35
+        for (u, v) in picked
+        for d in ((u, v), (v, u))
+    }
+    patched = binc.with_capacities(changed)
+    und_scale = {e: 0.35 for e in picked}
+    ref_ov = OverlayNetwork(
+        underlay=roofnet_overlay.underlay.with_scaled_capacities(
+            und_scale
+        ),
+        agents=roofnet_overlay.agents,
+        paths=roofnet_overlay.paths,
+    )
+    ref = compile_incidence(sol, ref_ov)
+    assert np.array_equal(patched.base_capacity, ref.base_capacity)
+    sim_patch = simulate(sol, roofnet_overlay, incidence=patched)
+    sim_ref = simulate(sol, ref_ov)
+    assert sim_patch.makespan == sim_ref.makespan
+    # unknown edges are ignored, non-positive rejected
+    assert np.array_equal(
+        binc.with_capacities({(991, 990): 5.0}).base_capacity,
+        binc.base_capacity,
+    )
+    with pytest.raises(ValueError, match="positive"):
+        binc.with_capacities({picked[0]: 0.0})
+
+
+def test_simulate_rejects_incidence_with_reference_engine(
+    roofnet_overlay, roofnet_categories
+):
+    from repro.net.demands import demands_from_links
+    from repro.net.routing import route_direct
+
+    m = roofnet_overlay.num_agents
+    sol = route_direct(
+        demands_from_links([(0, 1)], KAPPA, m),
+        roofnet_categories,
+        KAPPA,
+    )
+    binc = compile_incidence(sol, roofnet_overlay)
+    with pytest.raises(ValueError, match="vectorized"):
+        simulate(
+            sol, roofnet_overlay, engine="reference", incidence=binc
+        )
+
+
+# ---------------------------------------------------------------------------
+# Warm-started FMMD-P
+# ---------------------------------------------------------------------------
+
+
+def test_warm_fmmd_bitwise_equals_cold(
+    roofnet_overlay, roofnet_categories
+):
+    m = roofnet_overlay.num_agents
+    inc = compile_category_incidence(roofnet_categories, m, KAPPA)
+    atoms = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    # Mutate the state with one run, then reset and compare to cold.
+    state = _PriorityState(
+        atoms, m, roofnet_categories, KAPPA, incidence=inc
+    )
+    fmmd(
+        m, 8, categories=roofnet_categories, kappa=KAPPA,
+        priority=True, incidence=inc, warm_state=state,
+    )
+    # Capacity patch + reset: warm run vs cold run on patched structures.
+    e = sorted(roofnet_categories.edge_capacity)[0]
+    patched, touched = patch_categories_capacity(
+        roofnet_categories,
+        {e: roofnet_categories.edge_capacity[e] * 0.3},
+    )
+    pinc = patch_category_incidence(inc, patched, touched)
+    state.reset(pinc)
+    warm = fmmd(
+        m, 10, categories=patched, kappa=KAPPA,
+        priority=True, incidence=pinc, warm_state=state,
+    )
+    cold = fmmd(
+        m, 10, categories=patched, kappa=KAPPA,
+        priority=True, incidence=pinc,
+    )
+    assert np.array_equal(warm.matrix, cold.matrix)
+    assert warm.activated_links == cold.activated_links
+    assert warm.rho == cold.rho
+
+
+def test_warm_state_validation(roofnet_overlay, roofnet_categories):
+    m = roofnet_overlay.num_agents
+    inc = compile_category_incidence(roofnet_categories, m, KAPPA)
+    atoms = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    state = _PriorityState(
+        atoms, m, roofnet_categories, KAPPA, incidence=inc
+    )
+    with pytest.raises(ValueError, match="atoms"):
+        fmmd(
+            m, 4, categories=roofnet_categories, kappa=KAPPA,
+            priority=True, allowed_links=[(0, 1)], warm_state=state,
+        )
+    with pytest.raises(ValueError, match="does not match"):
+        fmmd(
+            m, 4, categories=roofnet_categories, kappa=2.0,
+            priority=True, warm_state=state,
+        )
+    with pytest.raises(ValueError, match="capacity-only"):
+        state.reset(
+            compile_category_incidence(roofnet_categories, m, 2.0)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Event sourcing
+# ---------------------------------------------------------------------------
+
+
+def _sto():
+    und = roofnet_like(seed=0)
+    edges = sorted(und.graph.edges)[:6]
+    return StochasticScenario(
+        links=(
+            MarkovLinkModel(
+                edges=tuple(edges[:3]),
+                scales=(1.0, 0.3),
+                transition=((0.6, 0.4), (0.5, 0.5)),
+            ),
+            MarkovLinkModel(
+                edges=tuple(edges[3:]),
+                scales=(1.0, 0.5),
+                transition=((0.7, 0.3), (0.6, 0.4)),
+            ),
+        ),
+        horizon=40.0,
+        step=5.0,
+        churn_hazard=0.02,
+        churn_agents=(1, 3),
+    )
+
+
+def test_events_from_stochastic_deterministic_and_minimal():
+    sto = _sto()
+    a = events_from_stochastic(sto, key=5)
+    b = events_from_stochastic(sto, key=5)
+    assert a == b
+    assert any(isinstance(e, LinkStateChange) for e in a)
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    # deltas only name edges whose scale moved
+    scen = sto.sample(5)
+    deltas = realization_deltas(scen)
+    prev = {}
+    for t, changed in deltas:
+        assert changed  # minimal: empty deltas are dropped
+        for e, s in changed.items():
+            assert s != prev.get(e, 1.0)
+        prev.update(changed)
+    assert events_from_stochastic(sto, key=6) != a
+
+
+def test_realization_deltas_rejects_scalar_phase():
+    from repro.net.simulator import CapacityPhase, Scenario
+
+    with pytest.raises(ValueError, match="per-edge"):
+        realization_deltas(
+            Scenario(capacity_phases=(CapacityPhase(1.0, 0.5),))
+        )
+    # scalar 1.0 (all-clear) is accepted and reverts prior scales
+    deltas = realization_deltas(
+        Scenario(
+            capacity_phases=(
+                CapacityPhase(1.0, {(0, 1): 0.5}),
+                CapacityPhase(2.0, 1.0),
+            )
+        )
+    )
+    assert deltas == ((1.0, {(0, 1): 0.5}), (2.0, {(0, 1): 1.0}))
+
+
+def test_malformed_reason():
+    assert malformed_reason(LinkStateChange(1.0, {(0, 1): 0.5})) is None
+    assert malformed_reason(
+        LinkStateChange(1.0, {(0, 1): -0.5})
+    ) is not None
+    assert malformed_reason(
+        LinkStateChange(float("nan"), {})
+    ) is not None
+    assert malformed_reason(AgentLeave(1.0, agent=-1)) is not None
+    assert malformed_reason(AgentJoin(1.0, node=2)) is None
+    assert malformed_reason(object()) is not None
+
+
+# ---------------------------------------------------------------------------
+# The service loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def service_overlay():
+    und = roofnet_like(seed=0)
+    return build_overlay(und, lowest_degree_nodes(und, 8))
+
+
+def _service(service_overlay, **kw):
+    cfg_kw = dict(design_iterations=12, drift_band=0.0)
+    cfg_kw.update(kw.pop("config", {}))
+    return DesignService(
+        service_overlay, kappa=KAPPA, config=ServiceConfig(**cfg_kw),
+        **kw,
+    )
+
+
+def test_absorb_untraversed_edge_is_noop(service_overlay):
+    svc = _service(service_overlay)
+    member = svc.categories.edge_capacity
+    free = next(
+        (u, v)
+        for u, v in sorted(service_overlay.underlay.graph.edges)
+        if (u, v) not in member and (v, u) not in member
+    )
+    inc_before, tau_before = svc._inc, svc.tau
+    rec = svc.process(LinkStateChange(time=1.0, scales={free: 0.01}))
+    assert rec.decision == "absorb"
+    assert svc._inc is inc_before  # nothing recompiled, provably no-op
+    assert svc.tau == tau_before
+
+
+def test_adopt_and_defer_follow_transition_pricing(service_overlay):
+    # Degrading edges the incumbent crosses: with a long horizon the
+    # redesign's savings beat the transition bill -> adopt ...
+    svc = _service(
+        service_overlay,
+        config=dict(horizon_rounds=1000.0, transition_rounds=0.0),
+    )
+    worst = sorted(svc._binc.edges)[:3]
+    rec = svc.process(
+        LinkStateChange(time=1.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec.decision == "adopt"
+    assert svc.tau < 0.9 * 32.0
+    # ... with a zero horizon no savings can be projected -> defer.
+    svc2 = _service(
+        service_overlay,
+        config=dict(horizon_rounds=0.0, transition_rounds=1.0),
+    )
+    rec2 = svc2.process(
+        LinkStateChange(time=1.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec2.decision == "defer"
+    assert svc2.tau > svc.tau  # deferred: still paying the degraded τ
+
+
+def test_patch_keeps_incumbent_within_band(service_overlay):
+    svc = _service(service_overlay, config=dict(drift_band=10.0))
+    e = sorted(svc.categories.edge_capacity)[0]
+    key = (e[0], e[1]) if e[0] < e[1] else (e[1], e[0])
+    w_before = svc.design
+    rec = svc.process(LinkStateChange(time=1.0, scales={key: 0.5}))
+    assert rec.decision in ("patch", "absorb")
+    assert svc.design is w_before
+    # patched capacities are live: C_F of touched families moved
+    ref = _scaled_reference(svc._overlay, {key: 0.5})
+    _assert_cats_bitwise(svc.categories, ref)
+
+
+def test_leave_and_join_regroup_bitwise(service_overlay, validate_mode):
+    svc = _service(service_overlay)
+    und = service_overlay.underlay
+    free_node = next(
+        n
+        for n in sorted(und.graph.nodes)
+        if n not in set(service_overlay.agents)
+    )
+    log = svc.run(
+        [
+            AgentLeave(time=1.0, agent=3),
+            AgentJoin(time=2.0, node=free_node),
+        ]
+    )
+    assert [r.decision for r in log] == ["redesign", "redesign"]
+    assert svc.members == (0, 1, 2, 4, 5, 6, 7, 8)
+    ref_ov = build_overlay(
+        und, [svc._node_of[h] for h in svc.members]
+    )
+    ref = compute_categories(ref_ov)
+    _assert_cats_bitwise(svc.categories, ref)
+    _assert_inc_bitwise(
+        svc._inc,
+        compile_category_incidence(ref, ref_ov.num_agents, KAPPA),
+    )
+    mixing.validate_mixing(svc.design)
+
+
+def test_single_survivor(service_overlay):
+    und = service_overlay.underlay
+    ov2 = build_overlay(und, list(service_overlay.agents[:2]))
+    svc = DesignService(
+        ov2, kappa=KAPPA, config=ServiceConfig(design_iterations=4)
+    )
+    rec = svc.process(AgentLeave(time=1.0, agent=0))
+    assert rec.decision == "redesign"
+    assert "single survivor" in rec.detail
+    assert svc.design.shape == (1, 1) and svc.design[0, 0] == 1.0
+    assert svc.tau == 0.0
+    # the last agent cannot leave
+    rec2 = svc.process(AgentLeave(time=2.0, agent=1))
+    assert rec2.decision == "reject"
+    assert svc.members == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Fault injection and degradation tiers (ServiceLog decision trail)
+# ---------------------------------------------------------------------------
+
+
+def test_incumbent_keep_after_retries_with_backoff(service_overlay):
+    clock = VirtualClock()
+    inj = FaultInjector(FaultPlan(seed=0, rate=1.0, modes=("raise",)))
+    svc = _service(service_overlay, clock=clock, fault_injector=inj)
+    w_before = svc.design
+    worst = sorted(svc._binc.edges)[:3]
+    rec = svc.process(
+        LinkStateChange(time=3.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec.decision == "incumbent-keep"
+    assert rec.tier == "incumbent-keep"
+    assert rec.retries == 2 and len(rec.faults) == 3
+    assert svc.design is w_before
+    # deterministic backoff on the virtual clock: 0.5 + 1.0 after t=3
+    assert clock.now() == pytest.approx(4.5)
+    # the patched capacities are still live despite the failed redesign
+    assert svc.tau > 16.0
+
+
+def test_timeout_faults_advance_virtual_clock(service_overlay):
+    clock = VirtualClock()
+    inj = FaultInjector(
+        FaultPlan(
+            seed=0, rate=1.0, modes=("timeout",), timeout_seconds=2.0
+        )
+    )
+    svc = _service(
+        service_overlay,
+        clock=clock,
+        fault_injector=inj,
+        config=dict(max_retries=1),
+    )
+    worst = sorted(svc._binc.edges)[:3]
+    rec = svc.process(
+        LinkStateChange(time=0.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec.decision == "incumbent-keep"
+    assert [m for _, m in inj.injected] == ["timeout", "timeout"]
+    # two timeouts (2s each) + one backoff (0.5s)
+    assert clock.now() == pytest.approx(4.5)
+
+
+def test_stale_candidate_detected_by_epoch(service_overlay):
+    svc = _service(service_overlay, config=dict(max_retries=0))
+    stale = svc._priced_candidate()
+    inj = FaultInjector(FaultPlan(seed=0, rate=1.0, modes=("stale",)))
+    inj._last_good, inj._has_last = stale, True
+    inj._clock = svc.clock
+    svc.injector = inj
+    worst = sorted(svc._binc.edges)[:3]
+    rec = svc.process(
+        LinkStateChange(time=1.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec.decision == "incumbent-keep"
+    assert "stale candidate" in rec.faults[0]
+
+
+def test_nan_poison_detected_and_retried(service_overlay):
+    inj = FaultInjector(FaultPlan(seed=3, rate=1.0, modes=("nan",)))
+    svc = _service(
+        service_overlay, fault_injector=inj, config=dict(max_retries=1)
+    )
+    worst = sorted(svc._binc.edges)[:3]
+    rec = svc.process(
+        LinkStateChange(time=1.0, scales={e: 0.25 for e in worst})
+    )
+    assert rec.decision == "incumbent-keep"
+    assert all("poisoned" in f for f in rec.faults)
+
+
+def test_contract_violation_falls_back_to_scratch_rebuild(
+    service_overlay, monkeypatch
+):
+    svc = _service(service_overlay)
+
+    def tripped(*a, **k):
+        raise ContractViolation(
+            "CategoryIncidence", "entry_coef", "finite", "poisoned"
+        )
+
+    monkeypatch.setattr(ds, "patch_category_incidence", tripped)
+    e = sorted(svc.categories.edge_capacity)[0]
+    key = (e[0], e[1]) if e[0] < e[1] else (e[1], e[0])
+    rec = svc.process(LinkStateChange(time=1.0, scales={key: 0.5}))
+    assert rec.decision == "scratch-rebuild"
+    assert rec.tier == "scratch-rebuild"
+    monkeypatch.undo()
+    # the rebuilt state matches the scratch reference bitwise
+    ref = _scaled_reference(svc._overlay, {key: 0.5})
+    _assert_cats_bitwise(svc.categories, ref)
+    mixing.validate_mixing(svc.design)
+
+
+def test_leave_fallback_renormalizes_incumbent(service_overlay):
+    inj = FaultInjector(FaultPlan(seed=0, rate=1.0, modes=("raise",)))
+    svc = _service(
+        service_overlay, fault_injector=inj, config=dict(max_retries=0)
+    )
+    rec = svc.process(AgentLeave(time=1.0, agent=2))
+    assert rec.decision == "incumbent-keep"
+    assert rec.tier == "incumbent-keep"
+    assert "renormalized" in rec.detail
+    assert svc.num_agents == 7
+    mixing.validate_mixing(svc.design)  # doubly stochastic fallback
+
+
+def test_join_fallback_reverts_membership(service_overlay):
+    inj = FaultInjector(FaultPlan(seed=0, rate=1.0, modes=("raise",)))
+    svc = _service(
+        service_overlay, fault_injector=inj, config=dict(max_retries=0)
+    )
+    members, w, epoch = svc.members, svc.design, svc.epoch
+    free_node = next(
+        n
+        for n in sorted(service_overlay.underlay.graph.nodes)
+        if n not in set(service_overlay.agents)
+    )
+    rec = svc.process(AgentJoin(time=1.0, node=free_node))
+    assert rec.decision == "incumbent-keep"
+    assert "reverted" in rec.detail
+    assert svc.members == members
+    assert svc.design is w
+    assert svc.epoch > epoch  # revert invalidates in-flight candidates
+
+
+def test_quarantine_then_drop(service_overlay):
+    svc = _service(service_overlay)
+    events = [
+        LinkStateChange(time=1.0, scales={(0, 1): -2.0}, origin=4),
+        LinkStateChange(time=2.0, scales={}, origin=4),
+        AgentLeave(time=3.0, agent=99),  # semantic, no origin
+        LinkStateChange(time=4.0, scales={(9876, 9875): 0.5}, origin=5),
+    ]
+    log = svc.run(events)
+    assert [r.decision for r in log] == [
+        "quarantine", "drop", "reject", "quarantine",
+    ]
+    assert all(r.tier == "quarantine" for r in log)
+    assert svc.quarantined == (4, 5)
+    assert len(log) == len(events)  # zero dropped events
+    assert svc.members == tuple(range(8))  # membership untouched
+
+
+def test_event_stream_zero_drops_and_replayable(service_overlay):
+    """A mixed malformed/chaotic stream: every event gets exactly one
+    record, and replaying the same stream on a fresh service reproduces
+    the same decision trail bitwise."""
+
+    def run_once():
+        inj = FaultInjector(FaultPlan(seed=11, rate=0.5))
+        svc = _service(service_overlay, fault_injector=inj)
+        member = sorted(svc.categories.edge_capacity)
+        events = [
+            LinkStateChange(
+                time=float(k),
+                scales={member[(3 * k) % len(member)]: 0.3 + 0.05 * k},
+            )
+            for k in range(8)
+        ]
+        events.insert(
+            3, LinkStateChange(time=2.5, scales={(0, 1): -1.0}, origin=2)
+        )
+        events.append(AgentLeave(time=9.0, agent=1))
+        log = svc.run(events)
+        assert len(log) == len(events)
+        return [(r.event, r.decision, r.tier, r.tau) for r in log]
+
+    assert run_once() == run_once()
+
+
+def test_faultplan_validation():
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan(rate=1.5)
+    with pytest.raises(ValueError, match="modes"):
+        FaultPlan(modes=("explode",))
+    inj = FaultInjector(FaultPlan(rate=0.0))
+    assert inj.call(lambda: 42) == 42
+    assert inj.injected == []
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="drift_band"):
+        ServiceConfig(drift_band=-0.1)
+    with pytest.raises(ValueError, match="backoff"):
+        ServiceConfig(backoff_factor=0.5)
+    clock = VirtualClock()
+    with pytest.raises(ValueError, match="backwards"):
+        clock.advance(-1.0)

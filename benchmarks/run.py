@@ -19,6 +19,7 @@ def main() -> None:
         lemma31_validation,
         phase_routing,
         roofline_bench,
+        rollout_scale,
         route_scale,
         sim_scale,
         stochastic_routing,
@@ -37,6 +38,7 @@ def main() -> None:
         "phase_routing": phase_routing.main,
         "stochastic_routing": stochastic_routing.main,
         "engine_parity": engine_parity.main,
+        "rollout_scale": rollout_scale.main,
         "design_scale": design_scale.main,
         # argv pinned: harness arguments are bench names, not flags
         "design_service": lambda: design_service.main([]),

@@ -190,6 +190,153 @@ def validate_branch_incidence(inc) -> None:
         )
 
 
+def _check_bucket(structure: str, field: str, padded: int,
+                  real: int) -> None:
+    """Padded axis: power-of-two bucket >= 8 with >= 1 pad slot."""
+    if padded < 8 or padded & (padded - 1) or padded <= real:
+        raise ContractViolation(
+            structure, field, "padded-bucket",
+            f"padded extent {padded} for real extent {real} — device "
+            "axes are power-of-two buckets >= 8 with at least one "
+            "padding slot (the inert row every pad entry points at); "
+            "rebuild via jax_engine.device_incidence",
+        )
+
+
+def _check_pad_value(structure: str, field: str, arr: np.ndarray,
+                     start: int, value) -> None:
+    if arr[start:].size and not np.all(arr[start:] == value):
+        raise ContractViolation(
+            structure, field, "inert-padding",
+            f"padding tail [{start}:] must be uniformly {value!r} so "
+            "padded entries/rows cannot perturb segment reductions — "
+            f"found {arr[start:][arr[start:] != value][:3]!r}",
+        )
+
+
+def _check_prefix(structure: str, field: str, arr: np.ndarray,
+                  expect: np.ndarray) -> None:
+    n = expect.shape[0]
+    if not np.array_equal(arr[:n], expect):
+        bad = int(np.argmax(arr[:n] != expect))
+        raise ContractViolation(
+            structure, field, "source-prefix",
+            f"entry {bad} is {arr[bad]!r} but the source incidence has "
+            f"{expect[bad]!r} — the real prefix must be bitwise-equal "
+            "to the BranchIncidence payload (padding never rewrites "
+            "live entries)",
+        )
+
+
+def validate_device_incidence(dev) -> None:
+    """All declared invariants of ``net.jax_engine.DeviceIncidence``.
+
+    The padded device layout is only safe if (a) every real prefix is
+    bitwise the source ``BranchIncidence`` payload, (b) every padding
+    entry points at the dedicated inert row (branch ``B`` with size 0,
+    edge ``E`` with capacity 1), (c) the edge-major ordering is
+    sorted so ``segment_sum(..., indices_are_sorted=True)`` is valid,
+    and (d) the bounded-degree tables the kernel actually gathers
+    through (``branch_table``/``edge_table``) repack the CSR segments
+    exactly, padded with the inert row id.
+    """
+    s = "DeviceIncidence"
+    src = dev.source
+    validate_branch_incidence(src)
+    nb, ne = src.flows.shape[0], src.base_capacity.shape[0]
+    nnz = src.flat_branch.shape[0]
+    if (dev.num_branches, dev.num_edges, dev.num_entries) != (nb, ne, nnz):
+        raise ContractViolation(
+            s, "num_branches", "source-extents",
+            f"declared (B, E, nnz)=({dev.num_branches}, {dev.num_edges},"
+            f" {dev.num_entries}) but source has ({nb}, {ne}, {nnz}) — "
+            "the unpadded extents are what run_rollouts slices back out",
+        )
+    zp = dev.flat_branch.shape[0]
+    for field in ("flat_branch", "flat_edge", "edge_branch", "edge_edge"):
+        arr = getattr(dev, field)
+        _check_dtype(s, field, arr, np.int64)
+        _check_length(s, field, arr, zp, "padded traversal entry")
+    _check_dtype(s, "base_capacity", dev.base_capacity, np.float64)
+    _check_dtype(s, "sizes", dev.sizes, np.float64)
+    _check_bucket(s, "flat_branch", zp, nnz)
+    _check_bucket(s, "base_capacity", dev.base_capacity.shape[0], ne)
+    _check_bucket(s, "sizes", dev.sizes.shape[0], nb)
+    _check_prefix(s, "flat_branch", dev.flat_branch, src.flat_branch)
+    _check_prefix(s, "flat_edge", dev.flat_edge, src.flat_edge)
+    _check_prefix(s, "edge_branch", dev.edge_branch, src.edge_branch)
+    _check_prefix(
+        s, "edge_edge", dev.edge_edge,
+        np.repeat(np.arange(ne, dtype=np.int64), np.diff(src.edge_ptr)),
+    )
+    _check_prefix(s, "base_capacity", dev.base_capacity,
+                  src.base_capacity)
+    _check_pad_value(s, "flat_branch", dev.flat_branch, nnz, nb)
+    _check_pad_value(s, "flat_edge", dev.flat_edge, nnz, ne)
+    _check_pad_value(s, "edge_branch", dev.edge_branch, nnz, nb)
+    _check_pad_value(s, "edge_edge", dev.edge_edge, nnz, ne)
+    _check_pad_value(s, "base_capacity", dev.base_capacity, ne, 1.0)
+    _check_pad_value(s, "sizes", dev.sizes, nb, 0.0)
+    for field, rows, real_ptr in (
+        ("branch_ptr", dev.sizes.shape[0], src.branch_ptr),
+        ("edge_ptr", dev.base_capacity.shape[0], src.edge_ptr),
+    ):
+        ptr = getattr(dev, field)
+        real = real_ptr.shape[0] - 1
+        _check_dtype(s, field, ptr, np.int64)
+        _check_length(s, field, ptr, rows + 1, "padded CSR pointer")
+        _check_prefix(s, field, ptr, real_ptr)
+        # Pad row `real` owns exactly the pad entries [nnz, zp); rows
+        # past it are empty — that closure is what makes the cumsum
+        # segment reduction equal an element-wise segment sum.
+        _check_pad_value(s, field, ptr, real + 1, zp)
+    for field, real_ptr, values, rows, fill in (
+        ("branch_table", src.branch_ptr, src.flat_edge,
+         dev.sizes.shape[0], ne),
+        ("edge_table", src.edge_ptr, src.edge_branch,
+         dev.base_capacity.shape[0], nb),
+    ):
+        table = getattr(dev, field)
+        _check_dtype(s, field, table, np.int32)
+        deg = np.diff(real_ptr)
+        width = max(2, 1 << max(0, int(deg.max(initial=0)) - 1).bit_length())
+        if table.shape != (rows, width):
+            raise ContractViolation(
+                s, field, "table-shape",
+                f"shape {table.shape} != ({rows}, {width}) — bounded-"
+                "degree tables span every padded row at the power-of-"
+                "two width of the maximum real degree",
+            )
+        expected = np.full((rows, width), fill, dtype=np.int32)
+        mask = np.arange(width)[None, :] < deg[:, None]
+        expected[: deg.size][mask] = values
+        if not np.array_equal(table, expected):
+            bad = int(np.argmax(np.any(table != expected, axis=1)))
+            raise ContractViolation(
+                s, field, "table-packing",
+                f"row {bad} does not repack its CSR segment — each row "
+                "must list the segment's ids in order, padded with the "
+                f"inert id {fill}; the kernel gathers through these "
+                "rows instead of the CSR entries",
+            )
+    if nnz > 1 and np.any(np.diff(dev.edge_edge[:nnz]) < 0):
+        bad = int(np.argmax(np.diff(dev.edge_edge[:nnz]) < 0))
+        raise ContractViolation(
+            s, "edge_edge", "entries-sorted",
+            f"edge ids decrease at entry {bad} — the edge-major "
+            "ordering must be ascending, it is what licenses the "
+            "cumsum-based sorted-segment reduction on the device",
+        )
+    if dev.sizes.size and not np.all(
+        np.isfinite(dev.sizes) & (dev.sizes >= 0)
+    ):
+        raise ContractViolation(
+            s, "sizes", "finite-nonnegative",
+            "per-branch demand sizes must be finite and nonnegative "
+            "byte counts (padding rows are exactly 0)",
+        )
+
+
 def validate_category_incidence(inc) -> None:
     """All declared invariants of ``net.categories.CategoryIncidence``."""
     s = "CategoryIncidence"
@@ -257,6 +404,7 @@ def validate_flat_categories(flat) -> None:
 VALIDATORS = {
     "BranchIncidence": validate_branch_incidence,
     "CategoryIncidence": validate_category_incidence,
+    "DeviceIncidence": validate_device_incidence,
     "_FlatCategories": validate_flat_categories,
 }
 

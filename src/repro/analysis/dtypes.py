@@ -18,6 +18,12 @@ wire formats and is out of scope).
                         literals in array constructors/casts
                         (``.astype(np.float32)`` is caught by the
                         attribute rules at the dtype reference)
+``implicit-jnp-dtype``  dtype-less ``jnp.zeros``/``ones``/``empty``/
+                        ``full``/``arange`` — numpy defaults to
+                        float64 but jax defaults to float32 (and
+                        int32 for ``arange``) unless x64 is on, so an
+                        implicit jnp dtype silently narrows whenever
+                        the x64 guard is bypassed
 """
 
 from __future__ import annotations
@@ -62,6 +68,14 @@ _NARROW_STRINGS = {
 _ARRAY_BUILDERS = {
     "array", "asarray", "zeros", "ones", "empty", "full", "arange",
     "astype", "dtype", "frombuffer", "fromiter",
+}
+# jnp builders whose *implicit* dtype is jax's (float32/int32 without
+# x64) rather than numpy's float64 — these must spell dtype= on
+# pricing paths. Maps builder -> number of positional args after which
+# a positional dtype appears (arange's positionals are all numeric, so
+# only a dtype= keyword counts there).
+_JNP_DEFAULT_BUILDERS = {
+    "zeros": 1, "ones": 1, "empty": 1, "full": 2, "arange": None,
 }
 
 
@@ -120,6 +134,24 @@ class _Visitor(ScopedVisitor):
                         arg, "narrow-dtype-string",
                         f"dtype string {arg.value!r} on a pricing path — "
                         "use np.float64 / np.int64 explicitly",
+                    )
+        chain = dotted_name(func) if isinstance(func, ast.Attribute) \
+            else None
+        if chain and chain.split(".", 1)[0] in ("jnp", "jax"):
+            builder = chain.rsplit(".", 1)[-1]
+            dtype_pos = _JNP_DEFAULT_BUILDERS.get(builder)
+            if builder in _JNP_DEFAULT_BUILDERS:
+                has_kw = any(kw.arg == "dtype" for kw in node.keywords)
+                has_pos = (
+                    dtype_pos is not None and len(node.args) > dtype_pos
+                )
+                if not has_kw and not has_pos:
+                    self._emit(
+                        node, "implicit-jnp-dtype",
+                        f"{chain}(...) without dtype= on a pricing path "
+                        "— jax defaults to float32/int32 when x64 is "
+                        "off; spell dtype=jnp.float64 / jnp.int64 so "
+                        "narrowing cannot depend on the x64 flag",
                     )
         self.generic_visit(node)
 

@@ -12,6 +12,14 @@ The codebase targets the modern jax API (``jax.make_mesh(axis_types=...)``,
 
 All call sites go through this module so the rest of the tree stays
 version-agnostic.
+
+This module is also the single owner of the ``jax_enable_x64`` flag:
+the pricing path (``repro.net.jax_engine``) is float64 end to end, and
+jax silently truncates to float32 unless x64 is enabled *before* the
+first trace. ``ensure_x64()`` turns the flag on idempotently;
+``require_x64()`` is the import-order guard every device-pricing entry
+point calls before tracing — it raises the named ``X64NotEnabledError``
+instead of letting a misconfigured process price designs in float32.
 """
 
 from __future__ import annotations
@@ -24,6 +32,57 @@ import jax
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 HAS_SET_MESH = hasattr(jax, "set_mesh")
 HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+class X64NotEnabledError(RuntimeError):
+    """float64 was not enabled before a pricing trace.
+
+    Raised by ``require_x64()`` when ``jax_enable_x64`` is off at the
+    point a device-pricing entry is about to trace: continuing would
+    silently downcast the simulator's float64 capacities/volumes (and
+    int64 CSR indices) to 32-bit, and the rtol=1e-9 parity gates against
+    the numpy engines would be meaningless. The fix is to import
+    ``repro.net.jax_engine`` (which calls ``ensure_x64()`` at import)
+    or call ``repro.compat.ensure_x64()`` yourself before any jax
+    tracing happens in the process.
+    """
+
+
+def x64_enabled() -> bool:
+    """Whether ``jax_enable_x64`` is currently on."""
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+def ensure_x64() -> None:
+    """Idempotently enable float64. Safe to call any number of times.
+
+    jax keys its trace caches on the x64 flag, so enabling it here never
+    corrupts earlier float32 traces — they simply stop being reused. If
+    the flag cannot take effect (e.g. a build that hard-disables x64),
+    raise ``X64NotEnabledError`` now rather than mis-pricing later.
+    """
+    if not x64_enabled():
+        jax.config.update("jax_enable_x64", True)
+    if not x64_enabled():
+        raise X64NotEnabledError(
+            "jax_enable_x64 could not be enabled; the jax pricing "
+            "engine requires float64"
+        )
+
+
+def require_x64() -> None:
+    """Import-order guard: raise ``X64NotEnabledError`` if x64 is off.
+
+    Called by every ``repro.net.jax_engine`` entry point before it
+    traces, so pricing can never silently run float32 — even if some
+    caller disabled the flag after ``ensure_x64()`` ran.
+    """
+    if not x64_enabled():
+        raise X64NotEnabledError(
+            "jax_enable_x64 is off: device pricing would silently run "
+            "float32. Call repro.compat.ensure_x64() before the first "
+            "trace (repro.net.jax_engine does so at import)."
+        )
 
 
 def make_mesh(shape, axis_names) -> jax.sharding.Mesh:

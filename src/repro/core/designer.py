@@ -45,6 +45,7 @@ from repro.net.routing import (
 from repro.net.simulator import (
     Scenario,
     SimResult,
+    compile_incidence,
     simulate,
     simulate_phased,
 )
@@ -71,10 +72,13 @@ class DesignOutcome:
     # Stochastic pricing (``stochastic=`` + ``stochastic_rollouts=N``):
     # per-rollout simulated τ of the deployed schedule (online re-routed
     # when ``reroute_per_phase``, else static), its seeded mean — which
-    # ``tau``/``total_time`` then price — and the p95 tail.
+    # ``tau``/``total_time`` then price — and the p95/p99 tails (p99 is
+    # only meaningful at the 256+ rollout budgets ``engine="jax"``
+    # makes affordable; at N=8 it ~equals the max sample).
     tau_samples: tuple[float, ...] = ()
     tau_mean: float = float("nan")
     tau_p95: float = float("nan")
+    tau_p99: float = float("nan")
 
     @property
     def name(self) -> str:
@@ -127,6 +131,7 @@ def evaluate_design(
     stochastic: StochasticScenario | None = None,
     stochastic_rollouts: int = 8,
     stochastic_seed: int = 0,
+    engine: str = "batched",
 ) -> DesignOutcome:
     """Route the design's demands and price its total training time.
 
@@ -173,6 +178,17 @@ def evaluate_design(
     frequently activate the same link set, so a grid sweep rarely
     re-routes; stochastic rollouts reuse it too (recurring Markov states
     re-realize the same per-edge scales).
+
+    ``engine`` selects the simulation engine for every pricing run
+    (see ``simulate``). With ``engine="jax"`` the stochastic path
+    compiles the branch incidence once per activated-link set (cached
+    as a padded ``DeviceIncidence`` in ``routing_cache``) and prices
+    ALL ``stochastic_rollouts`` in one batched XLA launch instead of a
+    Python loop — which is what makes 256+ rollout budgets (and hence
+    a meaningful ``tau_p99``) practical. The jax engine prices the
+    static deployed schedule; combining it with ``reroute_per_phase``
+    (host-side online re-routing) is rejected — price that policy with
+    the numpy engines.
     """
     if (scenario is not None or stochastic is not None) and overlay is None:
         raise ValueError("scenario pricing requires the overlay")
@@ -187,6 +203,12 @@ def evaluate_design(
         raise ValueError(
             "reroute_per_phase re-optimizes routing per capacity phase; "
             "it requires optimize_routing=True"
+        )
+    if engine == "jax" and reroute_per_phase:
+        raise ValueError(
+            "engine='jax' prices the static deployed schedule on the "
+            "device; online per-phase re-routing is host-side — price "
+            "reroute_per_phase with engine='batched'"
         )
     if reroute_per_phase:
         _check_per_edge_scalable(categories, scenario)
@@ -235,13 +257,44 @@ def evaluate_design(
     tau_samples: tuple[float, ...] = ()
     tau_mean = float("nan")
     tau_p95 = float("nan")
-    if stochastic is not None and demands:
+    tau_p99 = float("nan")
+    if stochastic is not None and demands and engine == "jax":
+        # Deferred import: the numpy pricing path must not pay a jax
+        # import (or trace) unless the device engine is requested.
+        from repro.net import jax_engine
+
+        dev_key = ("jax-device-incidence", frozenset(links))
+        dev = (
+            routing_cache.get(dev_key)
+            if routing_cache is not None else None
+        )
+        if dev is None:
+            binc = compile_incidence(sol, overlay)
+            flow_size = np.array(
+                [d.size for d in sol.demands], dtype=np.float64
+            )
+            dev = jax_engine.device_incidence(binc, flow_size)
+            if routing_cache is not None:
+                routing_cache[dev_key] = dev
+        batch = stochastic.realization_batch(
+            stochastic_seed, stochastic_rollouts, dev.source
+        )
+        sims = jax_engine.rollout_batch_results(sol, dev, batch)
+        sim = sims[-1]  # inspection aid, as in the numpy path
+        samples = [_priced_tau(s) for s in sims]
+        tau_samples = tuple(float(s) for s in samples)
+        tau_mean = float(np.mean(samples))
+        tau_p95 = float(np.percentile(samples, 95.0))
+        tau_p99 = float(np.percentile(samples, 99.0))
+        tau = tau_mean
+        tau_static_sched = tau_mean
+    elif stochastic is not None and demands:
         static_samples = []
         online_samples = []
         for realization in stochastic.sample_many(
             stochastic_seed, stochastic_rollouts
         ):
-            sim = simulate(sol, overlay, scenario=realization)
+            sim = simulate(sol, overlay, scenario=realization, engine=engine)
             static_samples.append(_priced_tau(sim))
             if reroute_per_phase and realization.capacity_phases:
                 _check_per_edge_scalable(categories, realization)
@@ -256,7 +309,7 @@ def evaluate_design(
                     online=True, overlay=overlay,
                 )
                 sim_phased = simulate_phased(
-                    phased, overlay, scenario=realization
+                    phased, overlay, scenario=realization, engine=engine
                 )
                 online_samples.append(_priced_tau(sim_phased))
             elif reroute_per_phase:
@@ -270,12 +323,13 @@ def evaluate_design(
         tau_samples = tuple(float(s) for s in samples)
         tau_mean = float(np.mean(samples))
         tau_p95 = float(np.percentile(samples, 95.0))
+        tau_p99 = float(np.percentile(samples, 99.0))
         tau = tau_mean
         tau_static_sched = float(np.mean(static_samples))
         if reroute_per_phase:
             tau_phased = float(np.mean(online_samples))
     elif scenario is not None and demands:
-        sim = simulate(sol, overlay, scenario=scenario)
+        sim = simulate(sol, overlay, scenario=scenario, engine=engine)
         tau = tau_static_sched = _priced_tau(sim)
         if reroute_per_phase and scenario.capacity_phases:
             phased = route_time_expanded(
@@ -285,7 +339,9 @@ def evaluate_design(
                 routing_cache=routing_cache, cache_key=frozenset(links),
                 base_solution=sol,  # unscaled segments reuse the static route
             )
-            sim_phased = simulate_phased(phased, overlay, scenario=scenario)
+            sim_phased = simulate_phased(
+                phased, overlay, scenario=scenario, engine=engine
+            )
             tau_phased = _priced_tau(sim_phased)
             # Deploy whichever schedule the scenario actually favors.
             tau = min(tau_static_sched, tau_phased)
@@ -309,6 +365,7 @@ def evaluate_design(
         tau_samples=tau_samples,
         tau_mean=tau_mean,
         tau_p95=tau_p95,
+        tau_p99=tau_p99,
     )
 
 
@@ -330,6 +387,7 @@ def design(
     stochastic: StochasticScenario | None = None,
     stochastic_rollouts: int = 8,
     stochastic_seed: int = 0,
+    engine: str = "batched",
 ) -> DesignOutcome:
     """Produce and price one named design.
 
@@ -341,7 +399,9 @@ def design(
     seeded expectation over ``stochastic_rollouts`` realizations
     (online re-routed when ``reroute_per_phase``);
     ``incidence``/``routing_cache`` amortize routing across repeated
-    calls (see ``evaluate_design``).
+    calls, and ``engine`` selects the simulation engine —
+    ``engine="jax"`` batches all rollouts in one XLA launch (see
+    ``evaluate_design``).
     """
     m = num_agents
     method = method.lower()
@@ -375,6 +435,7 @@ def design(
         stochastic=stochastic,
         stochastic_rollouts=stochastic_rollouts,
         stochastic_seed=stochastic_seed,
+        engine=engine,
     )
 
 
@@ -394,6 +455,7 @@ def sweep_iterations(
     stochastic: StochasticScenario | None = None,
     stochastic_rollouts: int = 8,
     stochastic_seed: int = 0,
+    engine: str = "batched",
 ) -> DesignOutcome:
     """Outer search over the design method's T for the best total time.
 
@@ -412,6 +474,9 @@ def sweep_iterations(
     activated-link set — and, for phase-adaptive segments, by
     (activated-link set, phase scale) — so grid points whose designs
     activate the same links are routed exactly once per phase.
+    ``engine="jax"`` additionally caches one padded device incidence
+    per activated-link set and prices each grid point's rollout batch
+    as a single XLA launch (see ``evaluate_design``).
     """
     # One compilation serves both the routing heuristic and the FMMD-P
     # priority filter across every grid point.
@@ -434,6 +499,7 @@ def sweep_iterations(
             stochastic=stochastic,
             stochastic_rollouts=stochastic_rollouts,
             stochastic_seed=stochastic_seed,
+            engine=engine,
         )
         if np.isfinite(out.total_time) and (
             best is None or out.total_time < best.total_time

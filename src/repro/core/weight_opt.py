@@ -46,7 +46,7 @@ def _smoothed_rho(
     l1: jnp.ndarray | float = 0.0,
 ) -> jnp.ndarray:
     w = _matrix_from_alpha(alpha, rows, cols, m)
-    a = w - jnp.full((m, m), 1.0 / m)
+    a = w - jnp.full((m, m), 1.0 / m, dtype=w.dtype)
     eigs = jnp.linalg.eigvalsh(a)
     both = jnp.concatenate([eigs, -eigs])  # |λ| via max(λ, −λ) smoothing
     smooth = jax.nn.logsumexp(beta * both) / beta

@@ -1023,6 +1023,11 @@ def _collect_result(
     )
 
 
+# Every engine ``simulate``/``simulate_phased`` dispatch on. Keep the
+# unknown-engine error below in sync when adding one.
+_ENGINES = ("batched", "vectorized", "reference", "jax")
+
+
 def simulate(
     sol: RoutingSolution,
     overlay: OverlayNetwork,
@@ -1042,8 +1047,12 @@ def simulate(
     rtol=1e-9 makespan parity by ``benchmarks/engine_parity.py``),
     "vectorized" (one bottleneck per round, replaying the reference
     tie-break order — bitwise-identical to "reference",
-    property-tested), or "reference" (original dict loops, the
-    scenario-free pure-Python escape hatch).
+    property-tested), "reference" (original dict loops, the
+    scenario-free pure-Python escape hatch), or "jax" (the batched
+    water-filling on device — ``net/jax_engine.py``; maxmin fairness
+    with capacity phases + churn, rtol=1e-9 against "batched"; its
+    real payoff is ``vmap``-batched stochastic rollouts via
+    ``jax_engine.simulate_rollout_batch``).
     incidence: a precompiled ``BranchIncidence`` for ``sol`` over
     ``overlay`` (possibly capacity-patched via ``with_capacities``),
     skipping branch enumeration + ``compile_incidence`` — the design
@@ -1052,8 +1061,14 @@ def simulate(
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")
-    if engine not in ("vectorized", "batched", "reference"):
-        raise ValueError(f"unknown engine {engine!r}")
+    if engine not in _ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}: valid engines are 'batched' "
+            "(default numpy water-filling), 'vectorized' (one "
+            "bottleneck per round, bitwise-matches 'reference'), "
+            "'reference' (pure-Python escape hatch), and 'jax' "
+            "(XLA device batching)"
+        )
     if incidence is not None and engine == "reference":
         raise ValueError(
             "a precompiled incidence requires a vectorized engine"
@@ -1066,6 +1081,15 @@ def simulate(
             )
     if scenario is not None and scenario.is_trivial:
         scenario = None
+    if engine == "jax":
+        # Deferred import: the numpy engines must stay importable (and
+        # fast to import) without touching jax.
+        from repro.net.jax_engine import simulate_jax
+
+        return simulate_jax(
+            sol, overlay, fairness=fairness, max_events=max_events,
+            scenario=scenario, incidence=incidence,
+        )
     if incidence is not None:
         if incidence.num_branches == 0:
             return SimResult(0.0, tuple(0.0 for _ in sol.demands), 0)
@@ -1111,15 +1135,19 @@ def simulate_phased(
     ``simulate`` — pass the same scenario the schedule was routed for.
     A single-segment schedule reduces to ``simulate(phased.solutions[0],
     ...)``; one whose segments share a tree matches the single-incidence
-    makespan (property-tested at rtol=1e-9). Engines: "vectorized" or
-    "batched" (the reference engine has no incidence to swap).
+    makespan (property-tested at rtol=1e-9). Engines: "vectorized",
+    "batched", or "jax" (the reference engine has no incidence to
+    swap). "jax" lowers the segment schedule to a ``lax.scan`` over
+    per-phase capacity vectors on the device; it requires every segment
+    to share one tree set (the swap guard's common case — volume
+    carryover across an actual re-route is host-side).
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")
-    if engine not in ("vectorized", "batched"):
+    if engine not in ("vectorized", "batched", "jax"):
         raise ValueError(
-            "phased simulation requires a vectorized engine "
-            "('vectorized' or 'batched')"
+            "phased simulation requires an incidence-swapping engine "
+            "('vectorized', 'batched', or 'jax')"
         )
     for sol in phased.solutions:
         for h, (demand, tree) in enumerate(zip(sol.demands, sol.trees)):
@@ -1141,6 +1169,22 @@ def simulate_phased(
             inc = compile_incidence(sol, overlay)
             compiled[sol.trees] = inc
         segments.append((start, sol, inc))
+    if engine == "jax":
+        if len(compiled) != 1:
+            raise ValueError(
+                "engine='jax' prices phased schedules whose segments "
+                "all share one tree set (segment boundaries become "
+                "device-side capacity-vector swaps); this schedule "
+                "re-routes at a boundary, which needs the host loop's "
+                "volume carryover — price it with engine='batched'"
+            )
+        from repro.net.jax_engine import simulate_jax
+
+        return simulate_jax(
+            base, overlay, fairness=fairness, max_events=max_events,
+            scenario=scenario, incidence=segments[0][2],
+            extra_boundaries=tuple(float(b) for b in phased.boundaries),
+        )
     return _simulate_vectorized(
         base, overlay, segments[0][2], fairness, max_events, scenario,
         batched=(engine == "batched"), segments=tuple(segments),

@@ -37,7 +37,12 @@ import math
 
 import numpy as np
 
-from repro.net.simulator import CapacityPhase, ChurnEvent, Scenario
+from repro.net.simulator import (
+    CapacityPhase,
+    ChurnEvent,
+    Scenario,
+    _phase_capacity_array,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,6 +281,21 @@ class StochasticScenario:
         rollout r of a sweep is reproducible in isolation."""
         return tuple(self.sample((seed, r)) for r in range(n))
 
+    def realization_batch(
+        self, seed, n: int, incidence, extra_boundaries=()
+    ) -> "RealizationBatch":
+        """N realizations densified for the device engine: the same
+        seeded draws as ``sample_many(seed, n)`` (bitwise — the batch
+        wraps those very ``Scenario`` objects), lowered onto a shared
+        boundary grid as one ``[rollouts, phases, edges]`` capacity
+        tensor over ``incidence``'s indexed edges, so
+        ``jax_engine.simulate_rollout_batch`` can ``vmap`` the whole
+        Monte-Carlo batch in one XLA launch."""
+        return densify_realizations(
+            self.sample_many(seed, n), incidence,
+            extra_boundaries=extra_boundaries,
+        )
+
 
 def realization_deltas(
     scenario: Scenario,
@@ -318,3 +338,90 @@ def realization_deltas(
             deltas.append((float(phase.start), changed))
         prev = cur
     return tuple(deltas)
+
+
+@dataclasses.dataclass(frozen=True)
+class RealizationBatch:
+    """Dense device-ready view of N sampled realizations.
+
+    ``starts`` ([P] float64, first entry 0.0) is the shared boundary
+    grid — the union of every realization's phase starts and churn
+    times (plus any caller-supplied extra boundaries). Stochastic
+    processes evolve on the fixed t = k·step grid, so realizations
+    share their boundaries and the union stays O(num_steps), which is
+    what lets ``vmap`` batch rollouts under one static shape.
+
+    ``capacity[r, p]`` is realization r's effective capacity vector on
+    the grid interval starting at ``starts[p]``, indexed on the
+    compiling ``BranchIncidence``'s edges. Each row is produced by the
+    same ``_phase_capacity_array`` the numpy event loop evaluates, so
+    the per-realization capacities are bitwise-equal to what
+    ``simulate(scenario=sample(key))`` would see — the engines diverge
+    only in fp drain grouping, never in inputs.
+
+    ``churn[r]`` carries realization r's churn events (the one
+    per-rollout quantity besides capacities), and ``realizations``
+    keeps the underlying ``Scenario`` objects for the numpy parity
+    oracle.
+    """
+
+    starts: np.ndarray  # [P] float64 boundary grid, starts at 0.0
+    capacity: np.ndarray  # [R, P, E] float64 effective capacities
+    churn: tuple[tuple[ChurnEvent, ...], ...]  # per rollout
+    realizations: tuple[Scenario, ...]
+
+    @property
+    def num_rollouts(self) -> int:
+        return self.capacity.shape[0]
+
+
+def densify_realizations(
+    realizations, incidence, extra_boundaries=()
+) -> RealizationBatch:
+    """Lower sampled ``Scenario`` realizations onto one dense
+    ``[rollouts, phases, edges]`` capacity tensor (see
+    ``RealizationBatch``). Rejects realizations carrying cross-traffic
+    or straggler events — those need the host event loop
+    (``engine="batched"``); capacity phases and churn are the paths the
+    device engine lowers."""
+    realizations = tuple(realizations)
+    if not realizations:
+        raise ValueError("densify_realizations needs >= 1 realization")
+    ts = [0.0]
+    ts.extend(float(t) for t in extra_boundaries)
+    for sc in realizations:
+        if sc.cross_traffic or sc.stragglers:
+            raise ValueError(
+                "densify_realizations lowers capacity phases and churn "
+                "only; cross-traffic and straggler events need the host "
+                "event loop — price this scenario with engine='batched'"
+            )
+        ts.extend(float(ph.start) for ph in sc.capacity_phases)
+        ts.extend(float(c.time) for c in sc.churn)
+    ts = [t for t in ts if t >= 0.0 and math.isfinite(t)]
+    starts = np.unique(np.asarray(ts, dtype=np.float64))
+    num_p = starts.size
+    num_e = incidence.num_edges
+    caps = np.empty((len(realizations), num_p, num_e), dtype=np.float64)
+    grid = starts.tolist()
+    for r, sc in enumerate(realizations):
+        phases = tuple(
+            sorted(sc.capacity_phases, key=lambda ph: ph.start)
+        )
+        phase_caps = [_phase_capacity_array(incidence, ph) for ph in phases]
+        cur = -1
+        nxt = 0
+        for p, t in enumerate(grid):
+            # Latest phase with start <= t — the numpy loop's rule.
+            while nxt < len(phases) and phases[nxt].start <= t:
+                cur = nxt
+                nxt += 1
+            caps[r, p] = (
+                phase_caps[cur] if cur >= 0 else incidence.base_capacity
+            )
+    return RealizationBatch(
+        starts=starts,
+        capacity=caps,
+        churn=tuple(sc.churn for sc in realizations),
+        realizations=realizations,
+    )

@@ -68,7 +68,7 @@ from repro.net.categories import (
 )
 from repro.net.demands import demands_from_links
 from repro.net.routing import RoutingSolution, route_direct
-from repro.net.simulator import compile_incidence, simulate
+from repro.net.simulator import _ENGINES, compile_incidence, simulate
 from repro.net.topology import OverlayNetwork, build_overlay
 from repro.runtime.events import (
     AgentJoin,
@@ -116,10 +116,16 @@ class ServiceConfig:
     ``horizon_rounds·(τ_now − τ_cand)`` to exceed the transition bill
     ``transition_rounds·τ_transition``. Retries back off
     ``backoff_base·backoff_factor^attempt`` virtual seconds.
+
+    ``engine`` selects the fluid simulator used for amendment/transition
+    pricing (any name ``repro.net.simulator.simulate`` accepts). Leave
+    transitions always price on ``"batched"``: their mid-round departure
+    is a straggler scenario, which the jax engine does not lower.
     """
 
     design_iterations: int | None = None
     weight_opt: bool = False
+    engine: str = "batched"
     drift_band: float = 0.05
     horizon_rounds: float = 50.0
     transition_rounds: float = 1.0
@@ -129,6 +135,11 @@ class ServiceConfig:
     price_transitions: bool = True
 
     def __post_init__(self):
+        if self.engine not in _ENGINES:
+            raise ValueError(
+                f"unknown pricing engine {self.engine!r}: valid engines "
+                f"are {', '.join(repr(e) for e in _ENGINES)}"
+            )
         if self.drift_band < 0:
             raise ValueError("drift_band must be nonnegative")
         if self.max_retries < 0:
@@ -457,7 +468,8 @@ class DesignService:
             # PR 3's transition price: the round in flight completes on
             # the *patched* capacities before the new design takes over.
             sim = simulate(
-                self._routing, self._overlay, incidence=self._binc
+                self._routing, self._overlay, incidence=self._binc,
+                engine=self.config.engine,
             )
             ttrans = float(sim.makespan)
         return DesignCandidate(
@@ -765,6 +777,8 @@ class DesignService:
         ):
             return float("nan")
         tau0 = max(float(old_routing.completion_time), 1e-9)
+        # Stays on "batched" regardless of config.engine: the departure
+        # is modeled as a mid-round straggler, outside the jax lowering.
         sim = simulate(
             old_routing,
             old_overlay,
@@ -811,6 +825,7 @@ class DesignService:
                 snapshot["routing"],
                 snapshot["overlay"],
                 incidence=snapshot["binc"],
+                engine=self.config.engine,
             )
             ttrans = float(sim.makespan)
         cand, retries, faults = self._attempt_redesign()

@@ -1,7 +1,13 @@
-"""Planted dtype violation: float32 on a pricing path."""
+"""Planted dtype violations: float32 and an implicit jnp dtype on a
+pricing path."""
 
+import jax.numpy as jnp
 import numpy as np
 
 
 def price(loads, capacity):
     return (loads / capacity).astype(np.float32)  # planted: narrow-float
+
+
+def pad(n):
+    return jnp.zeros(n)  # planted: implicit-jnp-dtype

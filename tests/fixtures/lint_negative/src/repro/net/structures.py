@@ -1,7 +1,7 @@
 """Planted contracts violation: one CSR structure lost its hook.
 
-All three registered contract classes are defined so the only
-contracts finding is the planted one: ``CategoryIncidence`` has no
+All registered contract classes are defined so the only contracts
+finding is the planted one: ``CategoryIncidence`` has no
 ``__post_init__`` -> ``maybe_validate`` wiring.
 """
 
@@ -21,6 +21,14 @@ class BranchIncidence:
 @dataclasses.dataclass(frozen=True)
 class CategoryIncidence:  # planted: missing-contract-hook
     capacity: object
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceIncidence:
+    source: object
+
+    def __post_init__(self):
+        maybe_validate(self)
 
 
 @dataclasses.dataclass(frozen=True)

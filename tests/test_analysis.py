@@ -36,20 +36,20 @@ def codes(findings):
 
 def test_fixture_tree_trips_every_checker():
     expected = {
-        "determinism": "unseeded-default-rng",
-        "dtypes": "narrow-float-dtype",
-        "parity": "unregistered-reference",
-        "contracts": "missing-contract-hook",
+        "determinism": ["unseeded-default-rng"],
+        "dtypes": ["narrow-float-dtype", "implicit-jnp-dtype"],
+        "parity": ["unregistered-reference"],
+        "contracts": ["missing-contract-hook"],
     }
-    for name, code in expected.items():
+    for name, expect in expected.items():
         findings = CHECKERS[name](FIXTURE)
-        assert [f.code for f in findings] == [code], name
+        assert [f.code for f in findings] == expect, name
 
 
 def test_cli_exits_nonzero_on_fixture_tree(capsys):
     assert main(["--all", "--root", str(FIXTURE)]) == 1
     out = capsys.readouterr().out
-    assert "4 finding(s)" in out
+    assert "5 finding(s)" in out
 
 
 def test_cli_checker_selection(capsys):
@@ -67,10 +67,17 @@ def test_cli_checker_selection(capsys):
 def test_repo_is_clean_under_all_checkers():
     unwaived, waived = run(REPO, list(CHECKERS))
     assert unwaived == [], "\n".join(f.render() for f in unwaived)
-    # The shipped waiver file is exercised (telemetry timers), and
-    # every waived finding is a reviewed determinism exemption.
+    # The shipped waiver file is exercised, and every waived finding
+    # is one of the two reviewed exemption families: determinism
+    # (telemetry timers) and dtypes (the jax kernel's bounded-value
+    # device arrays — gather-table ids and crosser counts).
     assert waived, "waivers.txt should hold live exemptions"
-    assert {f.checker for f in waived} == {"determinism"}
+    assert {f.checker for f in waived} == {"determinism", "dtypes"}
+    assert all(
+        f.path == "src/repro/net/jax_engine.py"
+        for f in waived
+        if f.checker == "dtypes"
+    )
 
 
 def test_cli_exits_zero_on_repo(capsys):
@@ -252,6 +259,26 @@ def test_dtypes_accepts_wide_types(tmp_path):
                     np.arange(4, dtype="float64"))
     """)
     assert dtypes.check(root) == []
+
+
+def test_dtypes_flags_implicit_jnp_builders(tmp_path):
+    """Dtype-less jnp constructors narrow to float32/int32 whenever the
+    x64 flag is off — flagged on pricing paths; explicit dtype= (or a
+    positional dtype) and plain-numpy implicit defaults are fine."""
+    root = _mini_tree(tmp_path, """
+        import jax.numpy as jnp
+        import numpy as np
+        def f(n):
+            bad = (jnp.zeros(n), jnp.arange(n), jnp.full((n, n), 0.5))
+            ok = (jnp.zeros(n, dtype=jnp.float64),
+                  jnp.ones(n, jnp.float64),
+                  jnp.arange(n, dtype=jnp.int64),
+                  np.zeros(n),  # numpy's implicit default IS float64
+                  np.arange(n))
+            return bad, ok
+    """)
+    got = [f.code for f in dtypes.check(root)]
+    assert got == ["implicit-jnp-dtype"] * 3
 
 
 def test_dtypes_ignores_learning_half(tmp_path):

@@ -116,9 +116,14 @@ def test_batched_engine_scenario_parity():
 
 
 def test_unknown_engine_rejected():
+    """The rejection names every valid engine, so the fix for a typo'd
+    engine= is in the message itself."""
     sol, ov = _line_instance()
-    with pytest.raises(ValueError, match="unknown engine"):
+    with pytest.raises(ValueError, match="unknown engine 'turbo'") as ei:
         simulate(sol, ov, engine="turbo")
+    msg = str(ei.value)
+    for name in ("'batched'", "'vectorized'", "'reference'", "'jax'"):
+        assert name in msg, msg
 
 
 @given(m=st.integers(3, 9), seed=st.integers(0, 100))

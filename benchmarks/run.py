@@ -18,6 +18,7 @@ def main() -> None:
         gossip_traffic,
         lemma31_validation,
         phase_routing,
+        priced_training,
         roofline_bench,
         rollout_scale,
         route_scale,
@@ -30,6 +31,7 @@ def main() -> None:
         "fig4_fmmd_variants": fig4_fmmd_variants.main,
         "table1_runtimes": table1_runtimes.main,
         "fig5_training": fig5_training.main,
+        "priced_training": priced_training.main,
         "lemma31_validation": lemma31_validation.main,
         "roofline_bench": roofline_bench.main,
         "gossip_traffic": gossip_traffic.main,

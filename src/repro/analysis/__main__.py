@@ -13,13 +13,21 @@ import sys
 import time
 from pathlib import Path
 
-from repro.analysis import common, contracts_static, determinism, dtypes, parity
+from repro.analysis import (
+    common,
+    contracts_static,
+    determinism,
+    docs_check,
+    dtypes,
+    parity,
+)
 
 CHECKERS = {
     "determinism": determinism.check,
     "dtypes": dtypes.check,
     "parity": parity.check,
     "contracts": contracts_static.check,
+    "docs": docs_check.check,
 }
 
 

@@ -3,10 +3,22 @@
 from repro.core.designer import DesignOutcome, design, evaluate_design, sweep_iterations
 from repro.core.dpsgd import (
     consensus_distance,
+    feddyn_init,
     make_dpsgd_step,
+    make_feddyn_step,
     mix_params,
     replicate_for_agents,
     train,
+)
+from repro.core.priced_training import (
+    GossipStrategy,
+    PhasedTau,
+    PricedTrainLog,
+    RoundRecord,
+    StaticTau,
+    StochasticTau,
+    pricer_for,
+    train_priced,
 )
 from repro.core.fmmd import FMMDResult, fmmd, fmmd_wp, theorem35_bound
 from repro.core.mixing import (

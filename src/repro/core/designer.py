@@ -189,6 +189,28 @@ def evaluate_design(
     static deployed schedule; combining it with ``reroute_per_phase``
     (host-side online re-routing) is rejected — price that policy with
     the numpy engines.
+
+    Engine / scenario / stochastic matrix::
+
+        engine=       scenario=                     stochastic=
+        ------------  ----------------------------  -------------------------
+        "batched"     full (needs ``overlay=``);    host loop over rollouts;
+                      ``reroute_per_phase=True``    ``reroute_per_phase``
+                      prices the phase-adaptive     deploys the *online*
+                      schedule too                  re-router per rollout
+        "vectorized"  full (same as "batched")      same host loop
+        "reference"   RAISES on any scenario        RAISES (rollouts are
+                                                    scenarios)
+        "jax"         capacity phases + churn;      ALL rollouts in one XLA
+                      RAISES on cross-traffic /     launch (``DeviceIncidence``
+                      stragglers; RAISES with       cached in
+                      ``reroute_per_phase=True``    ``routing_cache``); RAISES
+                                                    with ``reroute_per_phase``
+
+        Always RAISES: ``scenario=`` and ``stochastic=`` together;
+        either without ``overlay=``; ``reroute_per_phase`` without
+        ``optimize_routing``; per-edge capacity phases with inferred
+        (memberless) categories.
     """
     if (scenario is not None or stochastic is not None) and overlay is None:
         raise ValueError("scenario pricing requires the overlay")
@@ -477,6 +499,24 @@ def sweep_iterations(
     ``engine="jax"`` additionally caches one padded device incidence
     per activated-link set and prices each grid point's rollout batch
     as a single XLA launch (see ``evaluate_design``).
+
+    Engine / scenario / stochastic matrix (every grid point prices
+    through ``evaluate_design``, so its matrix applies verbatim)::
+
+        engine=       scenario=                     stochastic=
+        ------------  ----------------------------  -------------------------
+        "batched"     full (needs ``overlay=``)     host loop, common random
+                                                    numbers across grid points
+        "vectorized"  full (same as "batched")      same host loop
+        "reference"   RAISES on any scenario        RAISES
+        "jax"         capacity phases + churn;      one XLA launch per grid
+                      RAISES on cross-traffic /     point; RAISES with
+                      stragglers or                 ``reroute_per_phase=True``
+                      ``reroute_per_phase=True``
+
+        Always RAISES: ``scenario=`` with ``stochastic=``; either
+        without ``overlay=``; ``reroute_per_phase`` without
+        ``optimize_routing``.
     """
     # One compilation serves both the routing heuristic and the FMMD-P
     # priority filter across every grid point.

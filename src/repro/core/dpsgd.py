@@ -37,6 +37,7 @@ def make_dpsgd_step(
     loss_fn: Callable[[Any, Any], jnp.ndarray],
     learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 0.1,
     mix_first: bool = False,
+    prox_mu: float = 0.0,
 ) -> Callable:
     """Build a jitted D-PSGD step.
 
@@ -45,6 +46,16 @@ def make_dpsgd_step(
     mix_first=False implements eq. (2) (exchange ∥ compute overlap);
     mix_first=True implements the equivalent rule x_i ← Σ_j W_ij (x_j − ηg_j)
     — same convergence per [1], exposed for testing both forms.
+
+    prox_mu > 0 adds a FedProx-style proximal term adapted to gossip:
+    each agent's gradient is corrected by μ(x_i − Σ_j W_ij x_j), pulling
+    the local update toward the *neighborhood average* it just received
+    instead of a (nonexistent) server model. Under non-IID data the
+    correction damps client drift between exchanges — steady-state
+    consensus distance shrinks with μ while the fixed point of the
+    averaged dynamics is unchanged (the correction sums to ~0 across
+    agents for doubly-stochastic W). μ = 0 recovers plain D-PSGD
+    bitwise.
     """
 
     def lr_at(step):
@@ -57,12 +68,80 @@ def make_dpsgd_step(
         loss, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
         eta = lr_at(step)
         if mix_first:
+            if prox_mu:
+                anchor = mix_params(params, w)
+                grads = jax.tree.map(
+                    lambda g, p, a: g + prox_mu * (p - a),
+                    grads, params, anchor,
+                )
             local = jax.tree.map(lambda p, g: p - eta * g, params, grads)
             new_params = mix_params(local, w)
         else:
             mixed = mix_params(params, w)
+            if prox_mu:
+                grads = jax.tree.map(
+                    lambda g, p, a: g + prox_mu * (p - a),
+                    grads, params, mixed,
+                )
             new_params = jax.tree.map(lambda p, g: p - eta * g, mixed, grads)
         return new_params, jnp.mean(loss)
+
+    return step_fn
+
+
+def feddyn_init(params: Any) -> Any:
+    """Zero-initialized per-agent dynamic-regularization state for
+    ``make_feddyn_step`` (same stacked pytree shape as ``params``)."""
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def make_feddyn_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 0.1,
+    alpha: float = 0.01,
+) -> Callable:
+    """FedDyn-style dynamic regularization adapted to gossip.
+
+    Each agent carries a corrective state h_i (initialized by
+    ``feddyn_init``) that accumulates its historical drift from the
+    neighborhood anchor a_i = Σ_j W_ij x_j:
+
+        x_i ← a_i − η (g_i − h_i + α (x_i − a_i))
+        h_i ← h_i − α (x_i⁺ − a_i)
+
+    Over time h_i absorbs the persistent non-IID gradient bias, so the
+    per-agent fixed points line up without the bias↔penalty tradeoff a
+    static proximal term makes (FedDyn's dynamic-regularizer argument,
+    transplanted from the server setting to the mixing anchor — see
+    arxiv 2511.03284 for the decentralized treatment). The state is
+    strictly local: only x is gossiped, so the network price per round
+    is identical to plain D-PSGD's.
+
+    The returned step has signature ``step_fn((params, h), batch, w,
+    step) -> ((params, h), loss)`` — thread it through
+    ``priced_training.train_priced`` with ``extract_params=lambda c:
+    c[0]``.
+    """
+
+    def lr_at(step):
+        if callable(learning_rate):
+            return learning_rate(step)
+        return jnp.asarray(learning_rate)
+
+    @jax.jit
+    def step_fn(carry: Any, batch: Any, w: jnp.ndarray, step: jnp.ndarray):
+        params, h = carry
+        loss, grads = jax.vmap(jax.value_and_grad(loss_fn))(params, batch)
+        eta = lr_at(step)
+        anchor = mix_params(params, w)
+        new_params = jax.tree.map(
+            lambda a, g, hh, p: a - eta * (g - hh + alpha * (p - a)),
+            anchor, grads, h, params,
+        )
+        new_h = jax.tree.map(
+            lambda hh, x, a: hh - alpha * (x - a), h, new_params, anchor
+        )
+        return (new_params, new_h), jnp.mean(loss)
 
     return step_fn
 

@@ -215,12 +215,31 @@ def mix_sparse_flat(
     return jax.tree.unflatten(treedef, out)
 
 
+def effective_mixing_matrix(w: np.ndarray, rounds: int = 1) -> np.ndarray:
+    """W^rounds — the matrix one model update sees under multi-round
+    graph gossip (``rounds`` back-to-back exchanges on the same overlay
+    before the local step; arxiv 2506.10607). ρ(Wʳ − J) = ρ(W − J)ʳ, so
+    extra rounds buy convergence speed at r× the per-update network
+    price — ``priced_training.GossipStrategy`` charges exactly that.
+    ``rounds=1`` returns the float64 view of ``w`` (one-shot mixing).
+    """
+    if rounds < 1:
+        raise ValueError(f"gossip rounds must be >= 1: {rounds}")
+    w = np.asarray(w, dtype=np.float64)
+    return np.linalg.matrix_power(w, rounds) if rounds > 1 else w
+
+
 def gossip_collective_bytes(
-    schedule: GossipSchedule, kappa_bytes: float
+    schedule: GossipSchedule, kappa_bytes: float, gossip_rounds: int = 1
 ) -> float:
     """Modeled per-iteration gossip traffic (all agents, both directions).
 
     Each directed activated edge ships κ bytes; compare with clique
-    all-gather: m·(m−1)·κ.
+    all-gather: m·(m−1)·κ. ``gossip_rounds`` scales the figure for a
+    multi-round strategy (the ppermute schedule replays per round).
     """
-    return kappa_bytes * sum(len(r) for r in schedule.rounds)
+    if gossip_rounds < 1:
+        raise ValueError(f"gossip rounds must be >= 1: {gossip_rounds}")
+    return (
+        kappa_bytes * sum(len(r) for r in schedule.rounds) * gossip_rounds
+    )

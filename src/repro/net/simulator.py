@@ -187,6 +187,67 @@ class Scenario:
             ts.add(c.time)
         return tuple(sorted(t for t in ts if t > 0 and math.isfinite(t)))
 
+    def shifted(self, t0: float) -> "Scenario":
+        """The conditions as seen by a simulation *starting* at
+        wall-clock ``t0`` — the per-round pricing primitive of
+        ``repro.core.priced_training``: gossip round k of a training
+        run begins at the accumulated wall-clock of rounds 0..k-1, and
+        its network time is ``simulate(..., scenario=sc.shifted(t_k))``.
+
+        Capacity phases are piecewise-constant, so the phase active at
+        ``t0`` (the latest with ``start <= t0``) becomes the new t=0
+        phase and later phases keep their relative offsets. Windowed
+        events (cross-traffic, stragglers) are clipped to the remaining
+        window; fully elapsed windows drop out. A churn departure at or
+        before ``t0`` is absorbing — the agent is already gone — so it
+        re-emits at time 0 and keeps cancelling that agent's exchanges
+        (redesigning on the survivors, which removes those flows
+        outright, is the trainer's job, not the pricer's).
+        ``shifted(0.0)`` returns ``self`` unchanged.
+        """
+        if t0 < 0:
+            raise ValueError(f"shift origin must be nonnegative: {t0}")
+        if t0 == 0.0:
+            return self
+        active = None
+        phases: list[CapacityPhase] = []
+        for ph in sorted(self.capacity_phases, key=lambda p: p.start):
+            if ph.start <= t0:
+                active = ph
+            else:
+                phases.append(
+                    CapacityPhase(start=ph.start - t0, scale=ph.scale)
+                )
+        if active is not None:
+            phases.insert(0, CapacityPhase(start=0.0, scale=active.scale))
+        cross = tuple(
+            CrossTraffic(
+                src=ct.src, dst=ct.dst, rate=ct.rate,
+                start=max(0.0, ct.start - t0), stop=ct.stop - t0,
+            )
+            for ct in self.cross_traffic
+            if ct.stop > t0
+        )
+        stragglers = tuple(
+            StragglerEvent(
+                agent=ev.agent, slowdown=ev.slowdown,
+                start=max(0.0, ev.start - t0), stop=ev.stop - t0,
+            )
+            for ev in self.stragglers
+            if ev.stop > t0
+        )
+        churn = tuple(
+            ChurnEvent(agent=c.agent, time=max(0.0, c.time - t0))
+            for c in self.churn
+        )
+        return Scenario(
+            capacity_phases=tuple(phases),
+            cross_traffic=cross,
+            stragglers=stragglers,
+            churn=churn,
+            floor_frac=self.floor_frac,
+        )
+
 
 # ---------------------------------------------------------------------------
 # Incidence compilation — done once per routing solution
@@ -1058,6 +1119,25 @@ def simulate(
     skipping branch enumeration + ``compile_incidence`` — the design
     service's repeated-transition-pricing fast path. The caller owns
     the claim that it matches ``sol``/``overlay``.
+
+    Engine / scenario / stochastic matrix::
+
+        engine=       scenario=                     stochastic realizations
+        ------------  ----------------------------  -------------------------
+        "batched"     full (capacity phases,        host loop: simulate each
+                      cross-traffic, stragglers,    ``sample_many()`` draw as
+                      churn)                        its ``scenario=``
+        "vectorized"  full (same as "batched")      same host loop
+        "reference"   RAISES on any scenario;       unsupported
+                      RAISES on a precompiled
+                      ``incidence=``
+        "jax"         capacity phases + churn;      one XLA launch for the
+                      RAISES on cross-traffic or    whole batch via
+                      straggler events              ``jax_engine.
+                                                    rollout_batch_results``
+                                                    (see ``StochasticTau.
+                                                    price`` /
+                                                    ``evaluate_design``)
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")
@@ -1141,6 +1221,22 @@ def simulate_phased(
     per-phase capacity vectors on the device; it requires every segment
     to share one tree set (the swap guard's common case — volume
     carryover across an actual re-route is host-side).
+
+    Engine / scenario / stochastic matrix::
+
+        engine=       scenario=                     stochastic realizations
+        ------------  ----------------------------  -------------------------
+        "batched"     full; segments may re-route   host loop over
+                      at boundaries (volume         ``sample_many()`` draws
+                      carryover)
+        "vectorized"  full (same as "batched")      same host loop
+        "reference"   RAISES always (no incidence   unsupported
+                      to swap)
+        "jax"         capacity phases + churn;      via ``evaluate_design(
+                      RAISES on cross-traffic /     stochastic=...,
+                      stragglers and on schedules   engine="jax")`` (static
+                      that re-route at a boundary   schedule only)
+                      (price those with "batched")
     """
     if fairness not in ("maxmin", "equal"):
         raise ValueError(f"unknown fairness {fairness!r}")

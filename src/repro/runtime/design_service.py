@@ -121,6 +121,26 @@ class ServiceConfig:
     pricing (any name ``repro.net.simulator.simulate`` accepts). Leave
     transitions always price on ``"batched"``: their mid-round departure
     is a straggler scenario, which the jax engine does not lower.
+
+    Engine / scenario / stochastic matrix (service pricing calls)::
+
+        engine=       scenario= (service-built)     stochastic=
+        ------------  ----------------------------  -------------------------
+        "batched"     full — amendment, drift, and  n/a — the service prices
+                      leave-transition pricing      deterministic event
+                      (straggler scenario)          streams; Monte-Carlo
+        "vectorized"  full (same as "batched")      pricing lives in
+        "reference"   RAISES when an event needs    ``evaluate_design(
+                      scenario pricing or a         stochastic=...)`` /
+                      precompiled incidence         ``StochasticTau.price``
+        "jax"         amendment pricing only        (both honor this
+                      (capacity phases + churn);    ``engine``)
+                      leave transitions still
+                      price on "batched" (straggler
+                      events don't lower to XLA)
+
+        ``__post_init__`` RAISES on any engine name ``simulate`` does
+        not accept.
     """
 
     design_iterations: int | None = None

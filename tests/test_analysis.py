@@ -18,7 +18,14 @@ from pathlib import Path
 
 import pytest
 
-from repro.analysis import common, contracts_static, determinism, dtypes, parity
+from repro.analysis import (
+    common,
+    contracts_static,
+    determinism,
+    docs_check,
+    dtypes,
+    parity,
+)
 from repro.analysis.__main__ import CHECKERS, main, run
 
 REPO = Path(__file__).resolve().parents[1]
@@ -40,6 +47,7 @@ def test_fixture_tree_trips_every_checker():
         "dtypes": ["narrow-float-dtype", "implicit-jnp-dtype"],
         "parity": ["unregistered-reference"],
         "contracts": ["missing-contract-hook"],
+        "docs": ["missing-architecture-doc"],
     }
     for name, expect in expected.items():
         findings = CHECKERS[name](FIXTURE)
@@ -49,7 +57,7 @@ def test_fixture_tree_trips_every_checker():
 def test_cli_exits_nonzero_on_fixture_tree(capsys):
     assert main(["--all", "--root", str(FIXTURE)]) == 1
     out = capsys.readouterr().out
-    assert "5 finding(s)" in out
+    assert "6 finding(s)" in out
 
 
 def test_cli_checker_selection(capsys):
@@ -388,6 +396,50 @@ def test_parity_manifest_registers_all_repo_references():
         "apply_dense_reference",
     }
     assert parity.check(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# Docs-gate rules
+# ---------------------------------------------------------------------------
+
+
+def _docs_tree(tmp_path, doc: str | None):
+    net = tmp_path / "src" / "repro" / "net"
+    net.mkdir(parents=True)
+    (net / "pricing.py").write_text("x = 1\n")
+    (net / "_private.py").write_text("x = 1\n")
+    (net / "__init__.py").write_text("")
+    if doc is not None:
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "docs" / "architecture.md").write_text(doc)
+    return tmp_path
+
+
+def test_docs_missing_architecture_doc_is_one_finding(tmp_path):
+    root = _docs_tree(tmp_path, doc=None)
+    findings = docs_check.check(root)
+    assert [f.code for f in findings] == ["missing-architecture-doc"]
+
+
+def test_docs_flags_unlisted_module_only(tmp_path):
+    """Private/dunder modules are exempt; a filename mention anywhere
+    in the doc (prose, table, code span) satisfies the gate."""
+    root = _docs_tree(tmp_path, doc="# map\n\nnothing here\n")
+    findings = docs_check.check(root)
+    assert [(f.code, f.path) for f in findings] == [
+        ("undocumented-module", "src/repro/net/pricing.py")
+    ]
+    root2 = _docs_tree(tmp_path / "b", doc="| `pricing.py` | prices |\n")
+    assert docs_check.check(root2) == []
+
+
+def test_docs_green_on_empty_tree(tmp_path):
+    assert docs_check.check(tmp_path) == []
+
+
+def test_docs_gate_green_on_repo():
+    """Self-gate: docs/architecture.md lists every public module."""
+    assert docs_check.check(REPO) == []
 
 
 # ---------------------------------------------------------------------------

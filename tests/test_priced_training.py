@@ -1,0 +1,361 @@
+"""Per-round τ accounting for the network-priced training loop.
+
+Covers the PR-9 contracts: charged wall-clock is the *bitwise* running
+sum of per-round simulated τ on a deterministic scenario; a mid-run
+redesign switches the charged τ to the new design's on the correct
+round; stochastic pricing reuses the designer's seeded samples; the
+replayable log round-trips through JSON; and the gossip-strategy /
+heterogeneity plug points (multi-round gossip, FedProx, FedDyn) ride
+the same pricing path.
+"""
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConvergenceConstants,
+    GossipStrategy,
+    PhasedTau,
+    PricedTrainLog,
+    RoundRecord,
+    StaticTau,
+    StochasticTau,
+    consensus_distance,
+    design,
+    feddyn_init,
+    make_dpsgd_step,
+    make_feddyn_step,
+    pricer_for,
+    train_priced,
+)
+from repro.core.gossip import effective_mixing_matrix
+from repro.core.weight_opt import optimize_weights
+from repro.net import (
+    CapacityPhase,
+    CrossTraffic,
+    MarkovLinkModel,
+    PAPER_MODEL_BYTES,
+    Scenario,
+    StochasticScenario,
+    mid_path_edges,
+)
+from repro.net.simulator import simulate
+
+CONSTS = ConvergenceConstants(epsilon=0.05)
+
+
+def _quadratic(m=6):
+    """Heterogeneous quadratic: agent i pulls toward target i."""
+    targets = jnp.arange(m, dtype=jnp.float32)[:, None]
+    loss_fn = lambda p, b: jnp.mean((p["x"] - b) ** 2)
+    params = {"x": jnp.zeros((m, 1))}
+    ring = [(min(i, (i + 1) % m), max(i, (i + 1) % m)) for i in range(m)]
+    w = jnp.asarray(
+        optimize_weights(m, ring, steps=200).matrix, jnp.float32
+    )
+    return params, targets, loss_fn, w
+
+
+# ---------------------------------------------------------------------------
+# Scenario.shifted
+# ---------------------------------------------------------------------------
+
+
+def test_shifted_zero_is_identity_and_negative_raises():
+    sc = Scenario(capacity_phases=(CapacityPhase(start=5.0, scale=0.5),))
+    assert sc.shifted(0.0) is sc
+    with pytest.raises(ValueError):
+        sc.shifted(-1.0)
+
+
+def test_shifted_reanchors_active_capacity_phase():
+    sc = Scenario(
+        capacity_phases=(
+            CapacityPhase(start=0.0, scale=1.0),
+            CapacityPhase(start=10.0, scale=0.5),
+            CapacityPhase(start=20.0, scale=0.25),
+        )
+    )
+    sh = sc.shifted(12.0)
+    # phase active at t0=12 (scale 0.5) becomes the t=0 phase; the
+    # later breakpoint slides to 20-12=8.
+    assert sh.capacity_phases[0] == CapacityPhase(start=0.0, scale=0.5)
+    assert sh.capacity_phases[1] == CapacityPhase(start=8.0, scale=0.25)
+
+
+def test_shifted_clips_windows_and_reemits_past_churn():
+    from repro.net.simulator import ChurnEvent
+
+    sc = Scenario(
+        cross_traffic=(
+            CrossTraffic(src=0, dst=1, rate=1e6, start=5.0, stop=8.0),
+            CrossTraffic(src=1, dst=2, rate=1e6, start=20.0, stop=30.0),
+        ),
+        churn=(ChurnEvent(agent=3, time=4.0), ChurnEvent(agent=4, time=15.0)),
+    )
+    sh = sc.shifted(10.0)
+    # the 5-8s window is entirely in the past -> dropped; the 20-30s
+    # window slides to 10-20s.
+    assert len(sh.cross_traffic) == 1
+    ct = sh.cross_traffic[0]
+    assert (ct.start, ct.stop) == (10.0, 20.0)
+    # departures are absorbing: the past churn re-emits at t=0, the
+    # future one slides.
+    assert [(c.agent, c.time) for c in sh.churn] == [(3, 0.0), (4, 5.0)]
+
+
+# ---------------------------------------------------------------------------
+# Bitwise wall-clock accounting (deterministic scenario)
+# ---------------------------------------------------------------------------
+
+
+def test_wall_clock_is_bitwise_sum_of_simulated_tau(
+    roofnet_overlay, roofnet_categories
+):
+    """Tentpole contract: on a deterministic (phased) scenario every
+    step's charged τ is the simulated makespan under the phase active
+    at the round's wall-clock start, and the logged wall-clock is the
+    bitwise running float sum of those τ."""
+    out = design(
+        "fmmd-wp", roofnet_categories, PAPER_MODEL_BYTES, 10,
+        overlay=roofnet_overlay, iterations=12, constants=CONSTS,
+        optimize_routing=False,
+    )
+    # capacity halves globally partway through round 3
+    t_sag = 2.5 * out.tau
+    sc = Scenario(capacity_phases=(CapacityPhase(start=t_sag, scale=0.5),))
+    pricer = pricer_for(out, mode="phased", overlay=roofnet_overlay,
+                        scenario=sc)
+
+    params, targets, loss_fn, _ = _quadratic(10)
+    targets = targets[:10]
+    step = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    w = jnp.asarray(out.design.matrix, jnp.float32)
+    params, log = train_priced(
+        params, step, lambda k: targets, w, pricer, num_steps=6,
+        design_label=out.name,
+    )
+    log.validate()
+
+    # independent bitwise replay of the accounting
+    wall = 0.0
+    for r in log.records:
+        ref = simulate(
+            out.routing, roofnet_overlay,
+            scenario=(None if (sh := sc.shifted(wall)).is_trivial else sh),
+        ).makespan
+        assert r.tau == float(ref)  # exact, same pricing path
+        wall += r.tau
+        assert r.wall_clock == wall  # bitwise, same accumulation order
+    # the sag engaged: early rounds cost τ, late rounds cost more
+    assert log.records[0].tau == pytest.approx(out.tau)
+    assert log.records[-1].tau > 1.5 * log.records[0].tau
+    assert all(r.pricing == "phased" for r in log.records)
+
+
+def test_redesign_switches_charged_tau_on_correct_round():
+    params, targets, loss_fn, w = _quadratic(6)
+    step = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    w2 = jnp.asarray(np.full((6, 6), 1.0 / 6.0, np.float64))
+    params, log = train_priced(
+        params, step, lambda k: targets, w,
+        StaticTau(16.0, label="old"), num_steps=8,
+        design_label="old",
+        redesigns={4: ("new", w2, StaticTau(8.0, label="new"))},
+    )
+    log.validate()
+    assert [r.tau for r in log.records] == [16.0] * 4 + [8.0] * 4
+    assert [r.design for r in log.records] == ["old"] * 4 + ["new"] * 4
+    # bitwise: the switch lands exactly at the redesign step
+    assert log.records[3].wall_clock == 64.0
+    assert log.records[4].wall_clock == 72.0
+
+
+# ---------------------------------------------------------------------------
+# Stochastic pricing
+# ---------------------------------------------------------------------------
+
+
+def test_stochastic_from_outcome_reuses_designer_samples(
+    roofnet_overlay, roofnet_categories
+):
+    out = design(
+        "fmmd-wp", roofnet_categories, PAPER_MODEL_BYTES, 10,
+        overlay=roofnet_overlay, iterations=12, constants=CONSTS,
+        optimize_routing=False,
+    )
+    hops = mid_path_edges(roofnet_overlay, out.design.activated_links)
+    sto = StochasticScenario(
+        links=(MarkovLinkModel(
+            edges=tuple(hops), scales=(1.0, 0.2),
+            transition=((0.8, 0.2), (0.3, 0.7)),
+        ),),
+        step=max(out.tau / 2, 1.0), horizon=4 * max(out.tau, 1.0),
+    )
+    priced = design(
+        "fmmd-wp", roofnet_categories, PAPER_MODEL_BYTES, 10,
+        overlay=roofnet_overlay, iterations=12, constants=CONSTS,
+        optimize_routing=False, stochastic=sto, stochastic_rollouts=8,
+    )
+    reuse = StochasticTau.from_outcome(priced)
+    assert reuse.samples == priced.tau_samples
+    assert reuse.tau_for(0, 0.0) == pytest.approx(np.mean(priced.tau_samples))
+
+    # pricer_for with stochastic=None falls back to the donated samples
+    via_factory = pricer_for(priced, mode="stochastic")
+    assert via_factory.samples == priced.tau_samples
+
+    # jax one-launch pricing matches the numpy simulate loop exactly
+    cache: dict = {}
+    jax_p = StochasticTau.price(
+        out, roofnet_overlay, sto, rollouts=8, seed=3, engine="jax",
+        routing_cache=cache,
+    )
+    np_p = StochasticTau.price(
+        out, roofnet_overlay, sto, rollouts=8, seed=3, engine="batched",
+    )
+    np.testing.assert_allclose(jax_p.samples, np_p.samples, rtol=1e-9)
+    assert (
+        "jax-device-incidence",
+        frozenset(out.design.activated_links),
+    ) in cache
+
+    # sample mode cycles the seeded samples -> replayable per-round τ
+    s = StochasticTau(samples=(1.0, 2.0, 3.0), reduce="sample")
+    assert [s.tau_for(k, 0.0) for k in range(5)] == [1.0, 2.0, 3.0, 1.0, 2.0]
+    assert StochasticTau(samples=(1.0, 2.0, 3.0), reduce="p95").tau_for(
+        7, 0.0
+    ) == pytest.approx(np.percentile([1.0, 2.0, 3.0], 95))
+
+
+# ---------------------------------------------------------------------------
+# Replayable log
+# ---------------------------------------------------------------------------
+
+
+def test_log_json_roundtrip_preserves_bitwise_accounting():
+    params, targets, loss_fn, w = _quadratic(6)
+    step = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    _, log = train_priced(
+        params, step, lambda k: targets, w, StaticTau(7.3), num_steps=9,
+        log_every=4,
+    )
+    log2 = PricedTrainLog.from_json(log.to_json())
+    log2.validate()
+    assert len(log2.records) == len(log.records)
+    for a, b in zip(log.records, log2.records):
+        for f in ("step", "design", "pricing", "gossip_rounds"):
+            assert getattr(a, f) == getattr(b, f)
+        for f in ("tau", "wall_clock", "loss"):
+            assert getattr(a, f) == getattr(b, f)  # bitwise through repr
+        assert (a.consensus == b.consensus) or (
+            math.isnan(a.consensus) and math.isnan(b.consensus)
+        )
+    # consensus is logged on the log_every grid + final step only
+    logged = [r.step for r in log.records if not math.isnan(r.consensus)]
+    assert logged == [0, 4, 8]
+
+
+def test_time_to_loss():
+    recs = [
+        RoundRecord(step=k, design="d", pricing="static", gossip_rounds=1,
+                    tau=2.0, wall_clock=2.0 * (k + 1), loss=1.0 - 0.1 * k)
+        for k in range(5)
+    ]
+    log = PricedTrainLog(records=recs)
+    assert log.time_to_loss(0.85) == 6.0  # first step with loss <= 0.85
+    assert log.time_to_loss(-1.0) == float("inf")
+    assert log.total_wall == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Strategy / heterogeneity plug points
+# ---------------------------------------------------------------------------
+
+
+def test_multi_round_gossip_charges_r_rounds_and_mixes_w_pow_r():
+    m = 6
+    params, targets, loss_fn, w = _quadratic(m)
+    np.testing.assert_allclose(
+        effective_mixing_matrix(np.asarray(w), 3),
+        np.linalg.matrix_power(np.asarray(w, np.float64), 3),
+    )
+    step = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    runs = {}
+    for r in (1, 3):
+        p = jax.tree.map(jnp.copy, params)
+        p, log = train_priced(
+            p, step, lambda k: targets, w, StaticTau(10.0),
+            num_steps=40, strategy=GossipStrategy(rounds=r),
+        )
+        log.validate()
+        assert all(rec.tau == 10.0 * r for rec in log.records)
+        assert all(rec.gossip_rounds == r for rec in log.records)
+        runs[r] = float(consensus_distance(p))
+    # Wʳ contracts ρʳ: more gossip per update -> tighter consensus
+    assert runs[3] < runs[1]
+
+
+def test_prox_mu_damps_heterogeneous_drift():
+    m = 6
+    params, targets, loss_fn, w = _quadratic(m)
+    step_plain = make_dpsgd_step(loss_fn, learning_rate=0.05)
+    step_prox = make_dpsgd_step(loss_fn, learning_rate=0.05, prox_mu=0.5)
+    outs = {}
+    for name, step in (("plain", step_plain), ("prox", step_prox)):
+        p = jax.tree.map(jnp.copy, params)
+        p, log = train_priced(
+            p, step, lambda k: targets, w, StaticTau(1.0), num_steps=300,
+        )
+        outs[name] = float(consensus_distance(p))
+    assert outs["prox"] < outs["plain"]
+
+
+def test_feddyn_carry_trains_with_extract_params():
+    m = 6
+    params, targets, loss_fn, w = _quadratic(m)
+    step = make_feddyn_step(loss_fn, learning_rate=0.05, alpha=0.05)
+    carry = (params, feddyn_init(params))
+    carry, log = train_priced(
+        carry, step, lambda k: targets, w, StaticTau(1.0), num_steps=200,
+        extract_params=lambda c: c[0],
+    )
+    log.validate()
+    assert log.records[-1].loss < log.records[0].loss
+    assert not math.isnan(log.records[-1].consensus)
+    x = np.asarray(carry[0]["x"]).ravel()
+    assert abs(x.mean() - float(np.asarray(targets).mean())) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Validation errors
+# ---------------------------------------------------------------------------
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        GossipStrategy(rounds=0)
+    with pytest.raises(ValueError):
+        StochasticTau(samples=())
+    with pytest.raises(ValueError):
+        StochasticTau(samples=(1.0,), reduce="median")
+    with pytest.raises(ValueError, match="phased pricing needs"):
+        pricer_for(object(), mode="phased")
+    with pytest.raises(ValueError, match="unknown pricing mode"):
+        pricer_for(object(), mode="oracle")
+    with pytest.raises(ValueError, match="nonnegative"):
+        train_priced(
+            None, lambda *a: (None, 0.0), lambda k: None,
+            np.eye(2), StaticTau(1.0), num_steps=-1,
+        )
+    bad = PricedTrainLog(records=[
+        RoundRecord(step=0, design="d", pricing="static", gossip_rounds=1,
+                    tau=1.0, wall_clock=2.0, loss=0.0)
+    ])
+    with pytest.raises(ValueError, match="running"):
+        bad.validate()

@@ -6,10 +6,19 @@ budget: this benchmark times both and emits them through
 ``common.emit`` so ``benchmarks/trend.py`` flags contract-overhead
 regressions like any other tracked metric.
 
-* ``lint_seconds``     — one full ``repro.analysis`` run (all four
-                         checkers + waiver resolution) on this repo;
-* ``validate_seconds`` — REPRO_VALIDATE=1 construction of the three
-                         CSR structures on a 60-agent instance.
+* ``lint_seconds``      — one full ``repro.analysis`` run (all six
+                          checkers + waiver resolution) on this repo;
+* ``validate_seconds``  — REPRO_VALIDATE=1 construction of the three
+                          CSR structures on a 60-agent instance;
+* ``tracelint_seconds`` — tracing every registered trace-lint target
+                          (``tracelint.collect_metrics``), emitted in a
+                          second ``tracelint`` record together with the
+                          per-target jaxpr equation counts and the
+                          water-fill round's carry/operand/round-pair
+                          bytes — the Pallas-readiness numbers ROADMAP
+                          open item 1 tracks (eqn counts and bytes are
+                          deterministic for fixed shapes, so trend's
+                          tight threshold is exactly right for them).
 
 The validated/plain overhead ratio is printed for humans but not
 emitted: trend's naming convention reads ``ratio``/``x`` as
@@ -27,6 +36,7 @@ import time
 from pathlib import Path
 
 from benchmarks.common import emit
+from repro.analysis import tracelint
 from repro.analysis.__main__ import CHECKERS, run as run_checkers
 from repro.net import (
     build_overlay,
@@ -83,8 +93,15 @@ def _time_construction(overlay, cats, sol, validate: bool,
             os.environ["REPRO_VALIDATE"] = prev
 
 
+def _time_tracelint() -> tuple[float, dict[str, int]]:
+    t0 = time.perf_counter()
+    metrics = tracelint.collect_metrics(REPO)
+    return time.perf_counter() - t0, metrics
+
+
 def main() -> None:
     lint_seconds = _time_lint()
+    tracelint_seconds, trace_metrics = _time_tracelint()
 
     u = random_geometric_underlay(300, seed=0)
     ov = build_overlay(u, lowest_degree_nodes(u, NUM_AGENTS))
@@ -103,7 +120,21 @@ def main() -> None:
         f"lint_seconds={lint_seconds:.3f};"
         f"validate_seconds={validated:.3f}",
     )
+    emit(
+        "tracelint",
+        tracelint_seconds * 1e6,
+        f"tracelint_seconds={tracelint_seconds:.3f};" + ";".join(
+            f"{key}={value}"
+            for key, value in sorted(trace_metrics.items())
+        ),
+    )
     print(f"  lint suite ({', '.join(CHECKERS)}): {lint_seconds:.2f}s")
+    print(
+        f"  tracelint targets: {tracelint_seconds:.2f}s, "
+        + ", ".join(
+            f"{k}={v}" for k, v in sorted(trace_metrics.items())
+        )
+    )
     print(
         f"  {NUM_AGENTS}-agent CSR construction: {plain * 1e3:.1f}ms "
         f"plain vs {validated * 1e3:.1f}ms validated "

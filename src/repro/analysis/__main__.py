@@ -1,9 +1,10 @@
-"""CLI: ``python -m repro.analysis [--all | --<checker>...]``.
+"""CLI: ``python -m repro.analysis [--all | --<checker>... | name...]``.
 
 Runs the static invariant checkers and exits non-zero when any
-unwaived finding remains. ``--root`` points the suite at another tree
-(the negative fixtures under ``tests/fixtures/lint_negative`` are the
-self-test: one planted violation per checker).
+unwaived finding remains (2 on usage errors such as an unknown checker
+name). ``--root`` points the suite at another tree (the negative
+fixtures under ``tests/fixtures/lint_negative`` are the self-test: at
+least one planted violation per checker).
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ from repro.analysis import (
     docs_check,
     dtypes,
     parity,
+    tracelint,
 )
 
 CHECKERS = {
@@ -28,6 +30,7 @@ CHECKERS = {
     "parity": parity.check,
     "contracts": contracts_static.check,
     "docs": docs_check.check,
+    "tracelint": tracelint.check,
 }
 
 
@@ -63,9 +66,23 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--waivers", type=Path, default=None,
                     help="waiver file (default: <root>/src/repro/"
                          "analysis/waivers.txt)")
+    ap.add_argument("checkers", nargs="*", metavar="checker",
+                    help="checker names to run (same as the --<name> "
+                         "flags; unknown names exit 2)")
     args = ap.parse_args(argv)
 
-    selected = [n for n in CHECKERS if getattr(args, n)]
+    unknown = [n for n in args.checkers if n not in CHECKERS]
+    if unknown:
+        print(
+            f"repro.analysis: unknown checker(s) "
+            f"{', '.join(repr(n) for n in unknown)} — valid names: "
+            f"{', '.join(CHECKERS)}",
+            file=sys.stderr,
+        )
+        return 2
+    selected = [
+        n for n in CHECKERS if getattr(args, n) or n in args.checkers
+    ]
     if args.all or not selected:
         selected = list(CHECKERS)
     root = (args.root or common.repo_root()).resolve()
@@ -76,6 +93,8 @@ def main(argv: list[str] | None = None) -> int:
 
     for f in sorted(unwaived, key=lambda f: (f.path, f.line)):
         print(f.render())
+    for note in tracelint.LAST_SKIP_NOTES:
+        print(f"note: {note}")
     print(
         f"repro.analysis: {', '.join(selected)} on {root} — "
         f"{len(unwaived)} finding(s), {len(waived)} waived, "

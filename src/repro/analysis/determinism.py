@@ -16,6 +16,11 @@ breaks inside ``net/``, ``core/``, and ``runtime/``:
                          family constructed without a seed.
 ``impure-prng-seed``     a PRNG seed built from a time/os/uuid call
                          (``jax.random.key(time.time_ns())`` and kin).
+``fresh-prng-key``       ``jax.random.PRNGKey``/``key`` minted from
+                         literals only (``PRNGKey(0)``-style) inside
+                         library code — keys must be threaded from a
+                         parameter or ``split``; intentional sites get
+                         waivers.
 ``time-read``            wall/monotonic clock reads — fine for
                          telemetry fields, poison for anything that
                          feeds results; telemetry sites get waivers.
@@ -66,6 +71,19 @@ _PRNG_CTORS = {
     "random.default_rng", "random.Random", "random.SeedSequence",
     "jax.random.PRNGKey", "jax.random.key",
 }
+_JAX_KEY_CTORS = {
+    "jax.random.PRNGKey", "jax.random.key",
+    "random.PRNGKey", "random.key", "PRNGKey",
+}
+
+
+def _literal_only(node: ast.AST) -> bool:
+    """No Name/Attribute anywhere — the expression cannot be threading
+    a caller's seed (``PRNGKey(0)``, ``key(7919 * 3)``, ...)."""
+    return not any(
+        isinstance(sub, (ast.Name, ast.Attribute))
+        for sub in ast.walk(node)
+    )
 
 
 def _is_np_random(chain: str) -> bool:
@@ -198,6 +216,17 @@ class _Visitor(ScopedVisitor):
                 node, "impure-prng-seed",
                 f"{chain}(...) seeded from a time/os/uuid read — seeds "
                 "must be explicit, reproducible values",
+            )
+        if chain in _JAX_KEY_CTORS and node.args \
+                and not node.keywords \
+                and all(_literal_only(a) for a in node.args):
+            self._emit(
+                node, "fresh-prng-key",
+                f"{chain}(<literal>) mints a fresh key inside library "
+                "code — jax PRNG keys must be threaded from a caller's "
+                "key/seed parameter (or jax.random.split of one) so "
+                "two call sites can never silently share a stream; "
+                "waive intentional fixed-key sites with a reason",
             )
 
     def visit_Attribute(self, node: ast.Attribute) -> None:

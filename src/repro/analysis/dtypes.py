@@ -14,8 +14,10 @@ wire formats and is out of scope).
 
 ``narrow-float-dtype``  np/jnp float32/float16/half/single references
 ``narrow-int-dtype``    np/jnp int32/int16/int8/uint* references
-``narrow-dtype-string`` "float32"/"int32"/"f4"/"i4"… string dtype
-                        literals in array constructors/casts
+``narrow-dtype-string`` "float32"/"single"/"int32"/"f4"/"i4"… string
+                        dtype literals in array constructors/casts,
+                        including the method spellings
+                        ``.astype("float32")`` / ``.view("float32")``
                         (``.astype(np.float32)`` is caught by the
                         attribute rules at the dtype reference)
 ``implicit-jnp-dtype``  dtype-less ``jnp.zeros``/``ones``/``empty``/
@@ -61,13 +63,15 @@ _NARROW_INT = {
     "short", "intc",
 }
 _NARROW_STRINGS = {
-    "float32", "float16", "f4", "f2", "<f4", "<f2",
+    "float32", "float16", "half", "single", "f4", "f2", "<f4", "<f2",
     "int32", "int16", "int8", "i4", "i2", "i1",
     "<i4", "<i2", "uint8", "uint16", "uint32", "u4",
 }
+# ``view``/``astype`` are *method* spellings of a cast — narrowing via
+# ``x.view("float32")`` is the same violation as ``np.float32(x)``.
 _ARRAY_BUILDERS = {
     "array", "asarray", "zeros", "ones", "empty", "full", "arange",
-    "astype", "dtype", "frombuffer", "fromiter",
+    "astype", "view", "dtype", "frombuffer", "fromiter",
 }
 # jnp builders whose *implicit* dtype is jax's (float32/int32 without
 # x64) rather than numpy's float64 — these must spell dtype= on

@@ -1,0 +1,199 @@
+"""Trace-lint target registry — every JAX entry point of this repo.
+
+``repro.analysis.tracelint`` traces each ``TraceTarget`` registered in
+``TARGETS`` on a small concrete instance and certifies the IR-level
+contracts (one launch, f64 everywhere, no host callbacks, eqn budget —
+see ``tracelint_manifest.txt``). All three pricing entries funnel into
+the single jit boundary ``net.jax_engine._run_batch``; each target
+pins the argument shapes its *host path* actually builds, produced by
+the same code the entry runs (``device_args`` /
+``batch_cancel_times`` / ``_device_incidence_for``), so the certified
+jaxpr is the one production traces:
+
+``rollout-batch``    ``simulate_rollout_batch`` — a Monte-Carlo
+                     ``RealizationBatch`` over Markov-modulated links
+                     (two rollout widths, so the budget covers the
+                     batch axis);
+``phased-scan``      the phased ``lax.scan`` lowering ``simulate_jax``
+                     / ``simulate_phased`` drive — deterministic
+                     multi-phase capacity grid with extra boundaries;
+``stochastic-price`` ``StochasticTau.price``'s batch path — churned
+                     realizations through the designer's
+                     ``DeviceIncidence`` cache helper.
+
+Keep cases tiny (a 2-agent line): ``make_jaxpr`` is abstract, so shape
+coverage, not scale, is what certifies the contract. When you add a
+jitted entry point, register it here and budget it in the manifest —
+an unregistered entry is exactly the hole this lint exists to close.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.tracelint import TraceCase, TraceTarget
+
+_CACHE: dict = {}
+
+
+def _line_instance():
+    """2-agent line instance: routed solution, overlay, incidence,
+    device incidence — built once, shared by every case."""
+    got = _CACHE.get("line")
+    if got is None:
+        from repro.net import (
+            build_overlay,
+            compute_categories,
+            demands_from_links,
+            line_underlay,
+            route_direct,
+        )
+        from repro.net.jax_engine import device_incidence
+        from repro.net.simulator import compile_incidence
+
+        kappa = 1e6
+        u = line_underlay(2, capacity=125_000.0)
+        ov = build_overlay(u, [0, 1])
+        cats = compute_categories(ov)
+        demands = demands_from_links([(0, 1)], kappa, 2)
+        sol = route_direct(demands, cats, kappa)
+        inc = compile_incidence(sol, ov)
+        dev = device_incidence(
+            inc, np.array([d.size for d in sol.demands], dtype=np.float64)
+        )
+        got = _CACHE["line"] = (sol, ov, inc, dev)
+    return got
+
+
+def _stochastic(ov, churn: bool):
+    from repro.net import MarkovLinkModel, StochasticScenario
+
+    tau = 8.0  # ~kappa/capacity on the line instance
+    edges = tuple(ov.underlay.graph.edges)[:4] or ((0, 1),)
+    return StochasticScenario(
+        links=(MarkovLinkModel(
+            edges=edges, scales=(1.0, 0.1),
+            transition=((0.5, 0.5), (0.25, 0.75)),
+        ),),
+        step=0.4 * tau, horizon=4 * tau,
+        churn_agents=(0,) if churn else (),
+        churn_hazard=0.15 if churn else 0.0,
+    )
+
+
+def rollout_batch_args(rollouts: int, seed: int = 0, churn: bool = False):
+    """The ``_run_batch`` argument tuple ``simulate_rollout_batch``
+    launches for a seeded ``rollouts``-wide batch on the line instance
+    — also the grid the retrace-count harness walks."""
+    from repro.net.jax_engine import batch_cancel_times, device_args
+
+    sol, ov, inc, dev = _line_instance()
+    batch = _stochastic(ov, churn).realization_batch(seed, rollouts, inc)
+    flow_source = np.array(
+        [d.source for d in sol.demands], dtype=np.int64
+    )
+    cancel = batch_cancel_times(inc, flow_source, batch)
+    return device_args(
+        dev, batch.starts, batch.capacity, cancel, max_events=10_000
+    )
+
+
+def _run_batch_fn():
+    from repro.net import jax_engine
+
+    return jax_engine._run_batch
+
+
+def _make_rollout_case(rollouts: int):
+    def make():
+        return _run_batch_fn(), rollout_batch_args(rollouts)
+
+    return make
+
+
+def _make_phased_case():
+    """The phased lowering: a deterministic scenario with capacity
+    phases plus caller boundaries — ``simulate_jax``'s
+    ``densify_realizations`` path (P > 1, R = 1)."""
+
+    def make():
+        from repro.net import CapacityPhase, Scenario
+        from repro.net.jax_engine import (
+            batch_cancel_times,
+            device_args,
+        )
+        from repro.net.stochastic import densify_realizations
+
+        sol, ov, inc, dev = _line_instance()
+        edge = tuple(ov.underlay.graph.edges)[0]
+        scenario = Scenario(capacity_phases=(
+            CapacityPhase(start=2.0, scale={edge: 0.5}),
+            CapacityPhase(start=5.0, scale=0.8),
+        ))
+        batch = densify_realizations(
+            (scenario,), inc, extra_boundaries=(1.0, 3.0)
+        )
+        flow_source = np.array(
+            [d.source for d in sol.demands], dtype=np.int64
+        )
+        cancel = batch_cancel_times(inc, flow_source, batch)
+        return _run_batch_fn(), device_args(
+            dev, batch.starts, batch.capacity, cancel, max_events=10_000
+        )
+
+    return make
+
+
+def _make_price_case():
+    """``StochasticTau.price``'s batch path: the designer's
+    ``DeviceIncidence`` cache helper + churned realizations."""
+
+    def make():
+        from repro.core.priced_training import _device_incidence_for
+        from repro.net.jax_engine import (
+            batch_cancel_times,
+            device_args,
+        )
+
+        sol, ov, inc, dev_unused = _line_instance()
+        cache: dict = {}
+        dev = _device_incidence_for(
+            sol, ov, [(0, 1)], routing_cache=cache
+        )
+        batch = _stochastic(ov, churn=True).realization_batch(
+            0, 4, dev.source
+        )
+        flow_source = np.array(
+            [d.source for d in sol.demands], dtype=np.int64
+        )
+        cancel = batch_cancel_times(dev.source, flow_source, batch)
+        return _run_batch_fn(), device_args(
+            dev, batch.starts, batch.capacity, cancel, max_events=10_000
+        )
+
+    return make
+
+
+TARGETS: tuple[TraceTarget, ...] = (
+    TraceTarget(
+        name="rollout-batch",
+        path="src/repro/net/jax_engine.py",
+        scope="simulate_rollout_batch",
+        cases=(
+            TraceCase("line2-r4", _make_rollout_case(4)),
+            TraceCase("line2-r8", _make_rollout_case(8)),
+        ),
+    ),
+    TraceTarget(
+        name="phased-scan",
+        path="src/repro/net/jax_engine.py",
+        scope="_simulate_batch",
+        cases=(TraceCase("line2-phased", _make_phased_case()),),
+    ),
+    TraceTarget(
+        name="stochastic-price",
+        path="src/repro/core/priced_training.py",
+        scope="StochasticTau.price",
+        cases=(TraceCase("line2-churn-r4", _make_price_case()),),
+    ),
+)

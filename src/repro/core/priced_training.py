@@ -206,6 +206,34 @@ class PhasedTau:
         )
 
 
+def _device_incidence_for(
+    sol, overlay, activated_links, routing_cache: MutableMapping | None
+):
+    """The ``DeviceIncidence`` for a routed design, cached under the
+    same ``("jax-device-incidence", activated-link set)`` key
+    ``evaluate_design`` uses — share a ``routing_cache`` and the
+    incidence compiles exactly once per design. Pulled out of
+    ``StochasticTau.price`` so the trace-lint registry
+    (``repro.analysis.tracelint_targets``) certifies the pricing batch
+    path through the very same cache/compile code the pricer runs."""
+    from repro.net import jax_engine
+
+    dev_key = ("jax-device-incidence", frozenset(activated_links))
+    dev = (
+        routing_cache.get(dev_key)
+        if routing_cache is not None else None
+    )
+    if dev is None:
+        binc = compile_incidence(sol, overlay)
+        flow_size = np.array(
+            [d.size for d in sol.demands], dtype=np.float64
+        )
+        dev = jax_engine.device_incidence(binc, flow_size)
+        if routing_cache is not None:
+            routing_cache[dev_key] = dev
+    return dev
+
+
 @dataclasses.dataclass(frozen=True)
 class StochasticTau:
     """Per-round price from a Monte-Carlo τ sample set.
@@ -291,22 +319,10 @@ class StochasticTau:
         if engine == "jax":
             from repro.net import jax_engine
 
-            dev_key = (
-                "jax-device-incidence",
-                frozenset(outcome.design.activated_links),
+            dev = _device_incidence_for(
+                sol, overlay, outcome.design.activated_links,
+                routing_cache,
             )
-            dev = (
-                routing_cache.get(dev_key)
-                if routing_cache is not None else None
-            )
-            if dev is None:
-                binc = compile_incidence(sol, overlay)
-                flow_size = np.array(
-                    [d.size for d in sol.demands], dtype=np.float64
-                )
-                dev = jax_engine.device_incidence(binc, flow_size)
-                if routing_cache is not None:
-                    routing_cache[dev_key] = dev
             batch = stochastic.realization_batch(seed, rollouts, dev.source)
             sims = jax_engine.rollout_batch_results(sol, dev, batch)
         else:

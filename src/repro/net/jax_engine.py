@@ -278,6 +278,24 @@ def branch_cancel_times(
     return cancel
 
 
+def batch_cancel_times(
+    inc: BranchIncidence,
+    flow_source: np.ndarray,
+    batch: RealizationBatch,
+) -> np.ndarray:
+    """Per-rollout branch cancellation times ([R, B] float64, +inf when
+    none): ``branch_cancel_times`` applied to each realization's churn
+    schedule — the host half of the churn lowering that
+    ``rollout_batch_results`` (and the trace-lint registry) feeds to
+    the device launch."""
+    cancel = np.empty(
+        (batch.num_rollouts, inc.num_branches), dtype=np.float64
+    )
+    for r, churn in enumerate(batch.churn):
+        cancel[r] = branch_cancel_times(inc, flow_source, churn)
+    return cancel
+
+
 # ---------------------------------------------------------------------------
 # Device kernels
 # ---------------------------------------------------------------------------
@@ -529,6 +547,42 @@ def _run_batch(branch_table, edge_table, sizes, active0, starts, caps,
 # ---------------------------------------------------------------------------
 
 
+def device_args(
+    dev: DeviceIncidence,
+    starts: np.ndarray,
+    caps: np.ndarray,
+    cancel_times: np.ndarray,
+    max_events: int = 100_000,
+) -> tuple:
+    """The exact argument tuple ``run_rollouts`` launches ``_run_batch``
+    with: host-side padding of ``caps`` [R, P, E] / ``cancel_times``
+    [R, B] into the device buckets, rollout axis moved last
+    ([P, E_pad, R] / [B_pad, R] — see ``_simulate_batch`` for why the
+    kernel wants that layout). Exposed so the trace lint
+    (``repro.analysis.tracelint``) certifies ``_run_batch`` against the
+    argument shapes the real host path produces, not a reconstruction.
+    """
+    caps = np.asarray(caps, dtype=np.float64)
+    cancel_times = np.asarray(cancel_times, dtype=np.float64)
+    rollouts = caps.shape[0]
+    nb, ne = dev.num_branches, dev.num_edges
+    starts = np.asarray(starts, dtype=np.float64)
+    caps_p = np.ones(
+        (starts.size, dev.padded_edges, rollouts), dtype=np.float64
+    )
+    caps_p[:, :ne, :] = np.transpose(caps, (1, 2, 0))
+    cancel_p = np.full(
+        (dev.padded_branches, rollouts), np.inf, dtype=np.float64
+    )
+    cancel_p[:nb, :] = cancel_times.T
+    active0 = np.zeros((dev.padded_branches, rollouts), dtype=bool)
+    active0[:nb, :] = True
+    return (
+        dev.branch_table, dev.edge_table, dev.sizes, active0, starts,
+        caps_p, cancel_p, np.asarray(max_events, dtype=np.int64),
+    )
+
+
 def run_rollouts(
     dev: DeviceIncidence,
     starts: np.ndarray,
@@ -542,32 +596,17 @@ def run_rollouts(
 
     ``caps`` is [R, P, E] on the source incidence's edges and
     ``cancel_times`` is [R, B]; padding to the device buckets happens
-    here. Raises the numpy engines' starvation ``RuntimeError`` if any
-    rollout starves (all-zero rates with no future boundary).
+    in ``device_args``. Raises the numpy engines' starvation
+    ``RuntimeError`` if any rollout starves (all-zero rates with no
+    future boundary).
     """
     compat.require_x64()
-    caps = np.asarray(caps, dtype=np.float64)
-    cancel_times = np.asarray(cancel_times, dtype=np.float64)
-    rollouts = caps.shape[0]
-    nb, ne = dev.num_branches, dev.num_edges
-    # Rollout axis last ([P, E_pad, R] / [B_pad, R]) — see
-    # ``_simulate_batch`` for why the kernel wants that layout.
-    caps_p = np.ones(
-        (starts.size, dev.padded_edges, rollouts), dtype=np.float64
-    )
-    caps_p[:, :ne, :] = np.transpose(caps, (1, 2, 0))
-    cancel_p = np.full(
-        (dev.padded_branches, rollouts), np.inf, dtype=np.float64
-    )
-    cancel_p[:nb, :] = cancel_times.T
-    active0 = np.zeros((dev.padded_branches, rollouts), dtype=bool)
-    active0[:nb, :] = True
+    nb = dev.num_branches
+    rollouts = np.asarray(caps).shape[0]
     done, cancelled, active, events, starved = (
         np.asarray(a)
         for a in _run_batch(
-            dev.branch_table, dev.edge_table, dev.sizes, active0,
-            np.asarray(starts, dtype=np.float64), caps_p, cancel_p,
-            np.asarray(max_events, dtype=np.int64),
+            *device_args(dev, starts, caps, cancel_times, max_events)
         )
     )
     if bool(np.any(starved)):
@@ -652,11 +691,7 @@ def rollout_batch_results(
     flow_source = np.array(
         [d.source for d in sol.demands], dtype=np.int64
     )
-    cancel = np.empty(
-        (batch.num_rollouts, inc.num_branches), dtype=np.float64
-    )
-    for r, churn in enumerate(batch.churn):
-        cancel[r] = branch_cancel_times(inc, flow_source, churn)
+    cancel = batch_cancel_times(inc, flow_source, batch)
     outs = run_rollouts(
         dev, batch.starts, batch.capacity, cancel, max_events
     )

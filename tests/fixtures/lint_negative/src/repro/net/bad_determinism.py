@@ -1,8 +1,15 @@
-"""Planted determinism violation: OS-entropy-seeded generator."""
+"""Planted determinism violations: OS-entropy-seeded generator and a
+literal-minted jax PRNG key in library code."""
 
+import jax
 import numpy as np
 
 
 def sample_capacities(n):
     rng = np.random.default_rng()  # planted: unseeded-default-rng
     return rng.random(n)
+
+
+def sample_mask(n):
+    key = jax.random.PRNGKey(0)  # planted: fresh-prng-key
+    return jax.random.bernoulli(key, 0.5, (n,))

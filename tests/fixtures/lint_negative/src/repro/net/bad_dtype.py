@@ -1,5 +1,5 @@
-"""Planted dtype violations: float32 and an implicit jnp dtype on a
-pricing path."""
+"""Planted dtype violations: float32 casts (attribute, string, and
+method spellings) and an implicit jnp dtype on a pricing path."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -11,3 +11,11 @@ def price(loads, capacity):
 
 def pad(n):
     return jnp.zeros(n)  # planted: implicit-jnp-dtype
+
+
+def reinterpret(x):
+    return x.view("float32")  # planted: narrow-dtype-string (method)
+
+
+def shrink(x):
+    return x.astype("single")  # planted: narrow-dtype-string (alias)

@@ -1,0 +1,32 @@
+"""Planted retrace violations for the tracelint AST pass: a Python
+branch on a traced value, a closure-captured module-level array, and
+an unhashable static argument at a jit call site."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LOOKUP = np.array([1.0, 2.0, 4.0], dtype=np.float64)
+
+
+@jax.jit
+def clip_positive(x):
+    if x > 0:  # planted: traced-python-branch
+        return x
+    return -x
+
+
+@jax.jit
+def lookup_scale(x):
+    return x * jnp.asarray(_LOOKUP)  # planted: closure-captured-array
+
+
+def _scale_impl(x, mode):
+    return x * len(mode)
+
+
+scale = jax.jit(_scale_impl, static_argnames=("mode",))
+
+
+def run(x):
+    return scale(x, mode=[1, 2])  # planted: unhashable-static-arg

@@ -43,8 +43,11 @@ def codes(findings):
 
 def test_fixture_tree_trips_every_checker():
     expected = {
-        "determinism": ["unseeded-default-rng"],
-        "dtypes": ["narrow-float-dtype", "implicit-jnp-dtype"],
+        "determinism": ["unseeded-default-rng", "fresh-prng-key"],
+        "dtypes": [
+            "narrow-float-dtype", "implicit-jnp-dtype",
+            "narrow-dtype-string", "narrow-dtype-string",
+        ],
         "parity": ["unregistered-reference"],
         "contracts": ["missing-contract-hook"],
         "docs": ["missing-architecture-doc"],
@@ -54,10 +57,30 @@ def test_fixture_tree_trips_every_checker():
         assert [f.code for f in findings] == expect, name
 
 
+def test_fixture_tree_trips_every_tracelint_subcheck():
+    """One planted violation per tracelint sub-check: the three AST
+    retrace rules, the three jaxpr rules, and the manifest rule."""
+    findings = CHECKERS["tracelint"](FIXTURE)
+    assert codes(findings) == {
+        "traced-python-branch",
+        "closure-captured-array",
+        "unhashable-static-arg",
+        "narrow-float-in-trace",
+        "narrow-float-literal",
+        "host-callback",
+        "multiple-launches",
+        "stale-eqn-budget-entry",
+    }
+    by_code = {f.code: f for f in findings}
+    # the two-jit split is what fails the one-launch assertion
+    assert by_code["multiple-launches"].scope == "split"
+    assert by_code["host-callback"].scope == "with_callback"
+
+
 def test_cli_exits_nonzero_on_fixture_tree(capsys):
     assert main(["--all", "--root", str(FIXTURE)]) == 1
     out = capsys.readouterr().out
-    assert "6 finding(s)" in out
+    assert "17 finding(s)" in out
 
 
 def test_cli_checker_selection(capsys):
@@ -65,6 +88,22 @@ def test_cli_checker_selection(capsys):
     out = capsys.readouterr().out
     assert "narrow-float-dtype" in out
     assert "unseeded-default-rng" not in out
+
+
+def test_cli_positional_checker_selection(capsys):
+    """Checker names work as positional arguments too."""
+    assert main(["determinism", "--root", str(FIXTURE)]) == 1
+    out = capsys.readouterr().out
+    assert "unseeded-default-rng" in out
+    assert "narrow-float-dtype" not in out
+
+
+def test_cli_unknown_checker_exits_2(capsys):
+    assert main(["bogus", "--root", str(FIXTURE)]) == 2
+    err = capsys.readouterr().err
+    assert "unknown checker" in err
+    for name in CHECKERS:  # usage error lists every valid name
+        assert name in err
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +266,22 @@ def test_determinism_flags_set_iteration_not_sorted(tmp_path):
     assert len(got) == 3
 
 
+def test_determinism_flags_literal_key_but_not_threaded(tmp_path):
+    """`PRNGKey(0)`-style literal keys are flagged; keys derived from a
+    caller's seed parameter (or any non-literal expression) are the
+    sanctioned pattern and stay green."""
+    got = _determinism_codes(tmp_path, """
+        import jax
+        def f(seed):
+            bad = jax.random.PRNGKey(0)
+            bad2 = jax.random.key(7919 * 3)
+            ok = jax.random.PRNGKey(seed)
+            ok2 = jax.random.key(seed * 7919 + 3)
+            return bad, bad2, ok, ok2
+    """)
+    assert got == ["fresh-prng-key", "fresh-prng-key"]
+
+
 def test_determinism_accepts_seeded_rng(tmp_path):
     got = _determinism_codes(tmp_path, """
         import numpy as np
@@ -256,6 +311,20 @@ def test_dtypes_flags_narrow_types_and_strings(tmp_path):
     assert got == [
         "narrow-int-dtype", "narrow-dtype-string", "narrow-float-dtype",
     ]
+
+
+def test_dtypes_flags_method_string_casts(tmp_path):
+    """`.view("float32")` / `.astype("single")` are the method
+    spellings of a narrowing cast; wide strings stay green."""
+    root = _mini_tree(tmp_path, """
+        def f(x):
+            a = x.view("float32")
+            b = x.astype("single")
+            c = x.astype("float64")
+            return a, b, c
+    """)
+    got = [f.code for f in dtypes.check(root)]
+    assert got == ["narrow-dtype-string", "narrow-dtype-string"]
 
 
 def test_dtypes_accepts_wide_types(tmp_path):

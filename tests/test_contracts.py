@@ -193,6 +193,81 @@ def test_ptr_entry_consistency_catches_shifted_entries(
         "index-bounds" in str(err.value)
 
 
+def _device(pipeline):
+    ov, _, sol = pipeline
+    from repro.net.jax_engine import device_incidence
+
+    inc = compile_incidence(sol, ov)
+    sizes = np.array([d.size for d in sol.demands], dtype=np.float64)
+    return device_incidence(inc, sizes)
+
+
+def _dev_corruptions(dev):
+    nb = dev.num_branches
+    live_pad = dev.sizes.copy()
+    live_pad[nb:] = 1.0
+    stale_cap = dev.base_capacity.copy()
+    stale_cap[0] *= 2.0
+    wide = np.hstack(
+        (dev.branch_table,
+         np.full((dev.branch_table.shape[0], 1), dev.num_edges,
+                 dtype=np.int32))
+    )
+    mispacked = dev.edge_table.copy()
+    mispacked[0, 0] = nb  # inert id where a real branch id belongs
+    negative = dev.sizes.copy()
+    negative[0] = -1.0
+    return {
+        "declared extents disagree": (
+            "num_branches", nb + 1, "source-extents"),
+        "non-power-of-two bucket": (
+            "sizes", np.append(dev.sizes, 0.0), "padded-bucket"),
+        "live padding tail": ("sizes", live_pad, "inert-padding"),
+        "rewritten live prefix": (
+            "base_capacity", stale_cap, "source-prefix"),
+        "wrong table width": ("branch_table", wide, "table-shape"),
+        "mispacked table row": ("edge_table", mispacked, "table-packing"),
+        "negative demand size": ("sizes", negative, "finite-nonnegative"),
+        "wrong index dtype": (
+            "flat_branch", dev.flat_branch.astype(np.int32), "dtype"),
+        "mismatched padded lengths": (
+            "flat_edge", dev.flat_edge[:-1], "length"),
+    }
+
+
+def test_device_incidence_corruptions_raise_named(pipeline, validate_on):
+    """Each padded-table invariant of `DeviceIncidence`, corrupted one
+    field at a time via `dataclasses.replace`, raises its *named*
+    violation. (`entries-sorted` cannot be tripped in isolation: the
+    edge-major prefix must be bitwise the source's CSC order, which is
+    ascending by construction, so `source-prefix` always fires first —
+    the sorted-segment licence is subsumed by prefix equality.)"""
+    dev = _device(pipeline)
+    assert int(np.diff(dev.source.edge_ptr)[0]) >= 1  # row 0 is real
+    for label, (field, bad, invariant) in _dev_corruptions(dev).items():
+        with pytest.raises(ContractViolation) as err:
+            dataclasses.replace(dev, **{field: bad})
+        assert invariant in str(err.value), label
+        assert err.value.structure == "DeviceIncidence", label
+
+
+def test_device_incidence_corruptions_silent_when_off(
+    pipeline, validate_off
+):
+    dev = _device(pipeline)
+    for field, bad, _ in _dev_corruptions(dev).values():
+        dataclasses.replace(dev, **{field: bad})  # must not raise
+
+
+def test_device_incidence_wellformed_validates_clean(
+    pipeline, validate_on
+):
+    dev = _device(pipeline)  # construction itself validates
+    from repro.analysis.contracts import validate_device_incidence
+
+    validate_device_incidence(dev)  # and so does an explicit call
+
+
 def test_error_message_is_actionable(pipeline, validate_on):
     _, cats, _ = pipeline
     inc = compile_category_incidence(cats, M, KAPPA)
